@@ -1,0 +1,66 @@
+"""Shared benchmark harness: scaled dataset profiles + timing utils.
+
+All figures run on the CPU host at scaled-down sizes (Table III datasets are
+millions of edges; we keep the *shape statistics* via hypergraph.generators
+profiles and scale counts so each figure finishes in seconds).  Numbers to
+read: the *relative* contrasts — incremental vs recount, scaling slopes,
+cardinality effects — which is what the paper's figures demonstrate.
+
+Output protocol (benchmarks/run.py): ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hypergraph as H
+from repro.core.store import EMPTY
+from repro.hypergraph import generators as GEN
+
+MAXD = 32          # line-graph degree bound
+MAXR = 1023        # affected-region bound
+CHUNK = 2048
+
+
+def build(profile: str, n_edges: int, seed: int = 0, max_card: int = 8,
+          card_cap: int = 6):
+    n_vert = max(n_edges, 16)  # edge/vertex ratio keeps degrees bounded
+    edges = GEN.random_hypergraph(n_edges, n_vert, profile=profile,
+                                  max_card=card_cap, seed=seed, skew=0.3)
+    hg = H.from_lists(edges, num_vertices=n_vert, max_edges=4 * n_edges,
+                      max_card=max_card, slack=4.0)
+    return hg, n_vert
+
+
+def make_batch(hg, n_changes: int, delete_frac: float, n_vert: int,
+               max_card: int = 8, card_cap: int = 6, seed: int = 1,
+               profile: str = "coauth"):
+    present = np.asarray(hg.h2v.mgr.present)
+    live = np.asarray(hg.h2v.mgr.hid)[present == 1]
+    dels, ins = GEN.churn_batch(live, n_changes, delete_frac, n_vert,
+                                max_card, profile=profile, seed=seed,
+                                card_cap=card_cap)
+    nl, nc = GEN.pack_lists(ins, max_card)
+    return (jnp.asarray(dels), jnp.ones(len(dels), bool),
+            jnp.asarray(nl), jnp.asarray(nc), jnp.ones(len(ins), bool))
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3, **kw):
+    """Median wall time in µs; blocks on jax arrays."""
+    for _ in range(warmup):
+        r = fn(*args, **kw)
+        jax.block_until_ready(r)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args, **kw)
+        jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6), r
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,219 @@
+"""One benchmark per paper figure/table (ESCHER §V).  Each returns CSV rows
+``name,us_per_call,derived``; the derived column carries the figure's
+headline quantity (speedup, ratio, count)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import CHUNK, MAXD, MAXR, build, make_batch, row, timeit
+from repro.core import baselines as BL
+from repro.core import hypergraph as H
+from repro.core import update as U
+from repro.core.store import EMPTY
+from repro.hypergraph import generators as GEN
+
+PROFILES = ["coauth", "tags", "threads"]
+N_EDGES = 3000
+
+
+def _update_fn(hg, batch):
+    d, dm, nl, nc, im = batch
+    counts = jnp.zeros(26, jnp.int32)
+    return U.update_triad_counts(hg, counts, d, dm, nl, nc, im,
+                                 max_deg=MAXD, max_region=MAXR, chunk=CHUNK)
+
+
+# ------------------------------------------------------------------ Fig 6a
+def fig6a_batch_size():
+    out = []
+    for prof in PROFILES:
+        hg, nv = build(prof, N_EDGES)
+        for nch in (100, 200, 400):
+            batch = make_batch(hg, nch, 0.5, nv, profile=prof)
+            us, _ = timeit(_update_fn, hg, batch)
+            out.append(row(f"fig6a/{prof}/changes={nch}", us, "triad-update"))
+    return out
+
+
+# ------------------------------------------------------------------ Fig 6b
+def fig6b_scale():
+    out = []
+    for n in (1500, 3000, 6000):
+        hg, nv = build("coauth", n)
+        batch = make_batch(hg, 200, 0.5, nv)
+        us, _ = timeit(_update_fn, hg, batch)
+        out.append(row(f"fig6b/edges={n}", us, "fixed-200-changes"))
+    return out
+
+
+# ------------------------------------------------------------------ Fig 6c
+def fig6c_cardinality():
+    out = []
+    for cap, mc in ((6, 8), (12, 16), (24, 32)):
+        hg, nv = build("coauth", N_EDGES, max_card=mc, card_cap=cap)
+        batch = make_batch(hg, 200, 0.5, nv, max_card=mc, card_cap=cap)
+        us, _ = timeit(_update_fn, hg, batch)
+        out.append(row(f"fig6c/card<={cap}", us, "overflow-chaining"))
+    return out
+
+
+# ------------------------------------------------------------------ Fig 6d
+def fig6d_vertex_mods():
+    out = []
+    for prof in PROFILES:
+        hg, nv = build(prof, N_EDGES)
+        rng = np.random.default_rng(2)
+        present = np.asarray(hg.h2v.mgr.present)
+        live = np.asarray(hg.h2v.mgr.hid)[present == 1]
+        for nch in (100, 200, 400):
+            hids = jnp.asarray(rng.choice(live, nch).astype(np.int32))
+            vids = jnp.asarray(rng.integers(0, nv, nch).astype(np.int32))
+            ins = jnp.asarray(rng.random(nch) < 0.5)
+            us, _ = timeit(H.apply_vertex_updates, hg, hids, vids, ins,
+                           jnp.ones(nch, bool))
+            out.append(row(f"fig6d/{prof}/mods={nch}", us, "incident-vertex"))
+    return out
+
+
+# --------------------------------------------------------------- Fig 7/8/9
+def fig7_9_mochy():
+    """ESCHER dynamic update vs MoCHy recount (host CPU single-stream) and
+    batch-size / delete-ratio sweeps."""
+    out = []
+    for prof in PROFILES:
+        hg, nv = build(prof, N_EDGES)
+        # shared-memory MoCHy stand-in: numpy/python recount on the host
+        edges_py = list(H.to_python(hg).values())
+        t0 = time.perf_counter()
+        BL.mochy_cpu(edges_py)
+        t_cpu = (time.perf_counter() - t0) * 1e6
+        for nch in (100, 400):
+            batch = make_batch(hg, nch, 0.5, nv, profile=prof)
+            us, _ = timeit(_update_fn, hg, batch)
+            out.append(row(f"fig7_9/{prof}/changes={nch}", us,
+                           f"speedup_vs_cpu={t_cpu / us:.1f}x"))
+    # fig8: deletion-percentage sweep
+    hg, nv = build("coauth", N_EDGES)
+    for frac in (0.2, 0.4, 0.6, 0.8):
+        batch = make_batch(hg, 200, frac, nv)
+        us, _ = timeit(_update_fn, hg, batch)
+        out.append(row(f"fig8/del={int(frac * 100)}%", us, "triad-update"))
+    return out
+
+
+# ------------------------------------------------------------------ Fig 10
+def fig10_mochy_gpu():
+    """vs MoCHy device recount (same backend, no incremental machinery)."""
+    out = []
+    for prof in PROFILES:
+        hg, nv = build(prof, N_EDGES)
+        us_static, _ = timeit(BL.mochy_static, hg, max_deg=MAXD,
+                              max_region=4 * N_EDGES - 1, chunk=CHUNK)
+        batch = make_batch(hg, 200, 0.5, nv, profile=prof)
+        us_upd, _ = timeit(_update_fn, hg, batch)
+        out.append(row(f"fig10/{prof}", us_upd,
+                       f"speedup_vs_device_recount={us_static / us_upd:.1f}x"))
+    return out
+
+
+# ------------------------------------------------------------------ Fig 11
+def fig11_stathyper():
+    out = []
+    for prof in ("coauth", "tags"):
+        hg, nv = build(prof, 1200)
+        v_total = nv
+        us_static, _ = timeit(BL.stathyper_static, hg, v_total, max_nb=64,
+                              max_region=v_total, chunk=256)
+        batch = make_batch(hg, 60, 0.5, nv, profile=prof)
+
+        def upd(hg, batch):
+            d, dm, nl, nc, im = batch
+            return U.update_vertex_triad_counts(
+                hg, jnp.zeros(3, jnp.int32), v_total, d, dm, nl, nc, im,
+                max_nb=64, max_region=MAXR, chunk=256)
+
+        us_upd, res = timeit(upd, hg, batch)
+        out.append(row(f"fig11/{prof}", us_upd,
+                       f"speedup_vs_static={us_static / us_upd:.1f}x"))
+    return out
+
+
+# -------------------------------------------------------------- Fig 12-15
+def fig12_15_thyme():
+    out = []
+    WINDOW = 50
+    for prof in PROFILES:
+        hg, nv = build(prof, N_EDGES)
+        n_slots = hg.n_edge_slots
+        rng = np.random.default_rng(5)
+        times = jnp.asarray(rng.integers(0, 1000, n_slots).astype(np.int32))
+        us_static, _ = timeit(BL.thyme_static, hg, times, WINDOW,
+                              max_deg=MAXD, max_region=4 * N_EDGES - 1, chunk=CHUNK)
+        for frac in (0.2, 0.5, 0.8):
+            batch = make_batch(hg, 200, frac, nv, profile=prof)
+            d, dm, nl, nc, im = batch
+            ins_t = jnp.asarray(
+                rng.integers(1000, 1100, nl.shape[0]).astype(np.int32))
+
+            def upd(hg):
+                return U.update_triad_counts(
+                    hg, jnp.zeros(128, jnp.int32)[: 102], d, dm, nl, nc, im,
+                    max_deg=MAXD, max_region=MAXR, chunk=CHUNK,
+                    temporal=True, times=times, ins_times=ins_t, window=WINDOW)
+
+            from repro.core import motifs
+            def upd(hg):  # noqa: F811
+                return U.update_triad_counts(
+                    hg, jnp.zeros(motifs.NUM_TEMPORAL, jnp.int32),
+                    d, dm, nl, nc, im,
+                    max_deg=MAXD, max_region=MAXR, chunk=CHUNK,
+                    temporal=True, times=times, ins_times=ins_t, window=WINDOW)
+
+            us_upd, _ = timeit(upd, hg)
+            out.append(row(f"fig12_15/{prof}/del={int(frac * 100)}%", us_upd,
+                           f"speedup_vs_static={us_static / us_upd:.1f}x"))
+    return out
+
+
+# ------------------------------------------------------------------ Fig 16
+def fig16_hornet():
+    """Bytes-moved ratio (Hornet-like pow2 realloc vs ESCHER blocks) as the
+    cardinality STD of changed edges grows — the paper's crossover."""
+    out = []
+    rng = np.random.default_rng(7)
+    for std in (1, 4, 16, 64):
+        p2 = BL.Pow2Store()
+        em = BL.EscherHostModel()
+        for key in range(2000):
+            card = max(2, int(rng.normal(32, std)))
+            vals = rng.integers(0, 10_000, card).astype(np.int32)
+            p2.insert_list(key, vals)
+            em.insert_list(key, vals)
+        for _ in range(4000):  # churn: grow random lists
+            key = int(rng.integers(0, 2000))
+            p2.append(key, 1)
+            em.append(key, 1)
+        ratio = p2.bytes_moved / max(em.bytes_moved, 1)
+        out.append(row(f"fig16/std={std}", 0.0,
+                       f"bytes_ratio_hornet_over_escher={ratio:.2f}"))
+    return out
+
+
+# ------------------------------------------------------------------ Table IV
+def table4_summary(rows: list[str]) -> list[str]:
+    import re
+    speeds = [float(m.group(1)) for r in rows
+              for m in [re.search(r"speedup[^=]*=(\d+\.?\d*)x", r)] if m]
+    if not speeds:
+        return []
+    return [row("table4/speedup_avg", 0.0, f"{np.mean(speeds):.1f}x"),
+            row("table4/speedup_max", 0.0, f"{np.max(speeds):.1f}x")]
+
+
+ALL = [fig6a_batch_size, fig6b_scale, fig6c_cardinality, fig6d_vertex_mods,
+       fig7_9_mochy, fig10_mochy_gpu, fig11_stathyper, fig12_15_thyme,
+       fig16_hornet]

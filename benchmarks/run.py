@@ -1,0 +1,39 @@
+"""Benchmark runner — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig10]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter on figure fn name")
+    args = ap.parse_args()
+
+    from benchmarks import figures
+
+    print("name,us_per_call,derived")
+    all_rows: list[str] = []
+    for fn in figures.ALL:
+        if args.only and args.only not in fn.__name__:
+            continue
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # keep the harness going; a figure bug is visible
+            rows = [f"{fn.__name__}/ERROR,0,{type(e).__name__}:{e}"]
+        for r in rows:
+            print(r, flush=True)
+        all_rows += rows
+        print(f"# {fn.__name__} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    for r in figures.table4_summary(all_rows):
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: build a dynamic hypergraph on ESCHER, churn it, count triads.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import baselines as BL
+from repro.core import hypergraph as H
+from repro.core import update as U
+from repro.core.store import EMPTY
+from repro.hypergraph import generators as GEN
+
+
+def main():
+    # 1. build: 500 hyperedges over 500 vertices, coauthor-like cardinalities
+    edges = GEN.random_hypergraph(500, 500, profile="coauth", max_card=6,
+                                  seed=0, skew=0.3)
+    hg = H.from_lists(edges, num_vertices=500, max_edges=2048, max_card=8)
+    print(f"built hypergraph: {len(edges)} hyperedges, "
+          f"free_ptr={int(hg.h2v.free_ptr)} slots used")
+
+    # 2. initial triad census (MoCHy's 26 classes)
+    counts = BL.mochy_static(hg, max_deg=32, max_region=2047, chunk=1024)
+    print(f"initial triads: total={int(counts.sum())}, "
+          f"top classes={np.argsort(-np.asarray(counts))[:4].tolist()}")
+
+    # 3. churn: delete 20 random edges, insert 20 fresh ones, update counts
+    #    incrementally (paper Alg. 3) — no recount
+    present = np.asarray(hg.h2v.mgr.present)
+    live = np.asarray(hg.h2v.mgr.hid)[present == 1]
+    rng = np.random.default_rng(1)
+    dels = rng.choice(live, 20, replace=False).astype(np.int32)
+    ins = GEN.random_hypergraph(20, 500, profile="coauth", max_card=6,
+                                seed=2, skew=0.3)
+    nl, nc = GEN.pack_lists(ins, 8)
+    hg, counts, _ = U.update_triad_counts(
+        hg, counts, jnp.asarray(dels), jnp.ones(20, bool),
+        jnp.asarray(nl), jnp.asarray(nc), jnp.ones(20, bool),
+        max_deg=32, max_region=1023, chunk=1024)
+    print(f"after churn (20 del + 20 ins): total={int(counts.sum())}")
+
+    # 4. verify against a full recount — exactness is the paper's claim
+    ref = BL.mochy_static(hg, max_deg=32, max_region=2047, chunk=1024)
+    assert (np.asarray(counts) == np.asarray(ref)).all()
+    print("incremental update == full recount ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Architecture config schema + registry (``--arch <id>``)."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | moe | vlm | ssm | hybrid | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                   # 0 -> d_model // n_heads
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # attention details
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None      # hybrid archs
+    global_layer_every: int = 0               # 0 = none; else every k-th full attn
+    # VLM
+    cross_attn_every: int = 0                 # insert 1 cross-attn per k self layers
+    vision_embed_dim: int = 0
+    vision_tokens: int = 0
+    # SSM
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    # structure
+    encoder_only: bool = False
+    attn_free: bool = False
+    audio_feat_dim: int = 0
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    # source provenance
+    source: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch run long_500k? (SSM / hybrid with windowed attn)."""
+        return self.attn_free or (self.sliding_window is not None)
+
+    @property
+    def has_decode(self) -> bool:
+        return not self.encoder_only
+
+    def param_count(self) -> int:
+        """Approximate parameter count N (for MODEL_FLOPS = 6·N·D)."""
+        D, F, L, V = self.d_model, self.d_ff, self.n_layers, self.vocab
+        hd = self.hd
+        attn = D * self.n_heads * hd + 2 * D * self.n_kv_heads * hd + self.n_heads * hd * D
+        if self.n_experts:
+            ffn = self.n_experts * 3 * D * F
+        else:
+            ffn = 3 * D * F
+        per_layer = attn + ffn + 2 * D
+        emb = V * D * (1 if self.tie_embeddings else 2)
+        if self.family == "ssm":
+            per_layer = 5 * D * D + 3 * D * F  # rwkv time-mix + channel-mix
+        return L * per_layer + emb
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top_k experts count)."""
+        if not self.n_experts:
+            return self.param_count()
+        D, F, L, V = self.d_model, self.d_ff, self.n_layers, self.vocab
+        hd = self.hd
+        attn = D * self.n_heads * hd + 2 * D * self.n_kv_heads * hd + self.n_heads * hd * D
+        ffn = self.top_k * 3 * D * F
+        emb = V * D * (1 if self.tie_embeddings else 2)
+        return L * (attn + ffn + 2 * D) + emb
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        return dataclasses.replace(
+            self,
+            # VLM needs at least one full (self×k + cross) group
+            n_layers=(self.cross_attn_every + 1) if self.cross_attn_every
+            else min(self.n_layers, 2),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=max(1, min(self.n_kv_heads, 2)),
+            head_dim=16,
+            d_ff=128,
+            vocab=256,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            vision_embed_dim=32 if self.vision_embed_dim else 0,
+            vision_tokens=8 if self.vision_tokens else 0,
+            ssm_state=min(self.ssm_state, 8) if self.ssm_state else 0,
+            sliding_window=32 if self.sliding_window else None,
+            audio_feat_dim=24 if self.audio_feat_dim else 0,
+            cross_attn_every=self.cross_attn_every,
+        )
+
+
+ARCH_IDS = [
+    "moonshot-v1-16b-a3b",
+    "phi3.5-moe-42b-a6.6b",
+    "qwen3-32b",
+    "mistral-large-123b",
+    "qwen2.5-3b",
+    "command-r-plus-104b",
+    "llama-3.2-vision-90b",
+    "rwkv6-1.6b",
+    "hymba-1.5b",
+    "hubert-xlarge",
+]
+
+_MOD = {
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b_a6_6b",
+    "qwen3-32b": "qwen3_32b",
+    "mistral-large-123b": "mistral_large_123b",
+    "qwen2.5-3b": "qwen25_3b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "llama-3.2-vision-90b": "llama32_vision_90b",
+    "rwkv6-1.6b": "rwkv6_1p6b",
+    "hymba-1.5b": "hymba_1p5b",
+    "hubert-xlarge": "hubert_xlarge",
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_MOD[name]}")
+    return mod.CONFIG

@@ -1,0 +1,18 @@
+from repro.configs.base import ArchConfig
+
+# HuBERT X-Large: 48L encoder-only, d_model 1280, 16H, d_ff 5120, vocab 504
+# (cluster targets).  Audio frontend (conv feature extractor) is a STUB per
+# the assignment: input_specs() provides precomputed frame embeddings.
+CONFIG = ArchConfig(
+    name="hubert-xlarge",
+    family="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5120,
+    vocab=504,
+    encoder_only=True,
+    audio_feat_dim=512,
+    source="arXiv:2106.07447 (unverified)",
+)

@@ -1,0 +1,20 @@
+from repro.configs.base import ArchConfig
+
+# Hymba-1.5B: 32L, d_model 1600, 25H (GQA kv=5), d_ff 5504, vocab 32001,
+# parallel attention + Mamba heads in every layer; sliding-window attention
+# with a full-attention layer every 8 (global_layer_every).
+CONFIG = ArchConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab=32_001,
+    ssm_state=16,
+    sliding_window=1024,
+    global_layer_every=8,
+    source="arXiv:2411.13676",
+)

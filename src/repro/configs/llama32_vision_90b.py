@@ -1,0 +1,22 @@
+from repro.configs.base import ArchConfig
+
+# Llama-3.2-Vision-90B backbone: 100 layers total = 80 self-attn + 20
+# cross-attn (1 per 4 self layers), d_model 8192, 64H (GQA kv=8), d_ff 28672,
+# vocab 128256.  Vision frontend is a STUB per the assignment: input_specs()
+# provides precomputed patch embeddings [B, vision_tokens, vision_embed_dim].
+CONFIG = ArchConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28_672,
+    vocab=128_256,
+    head_dim=128,
+    cross_attn_every=4,          # 1 cross layer per 4 self layers
+    vision_embed_dim=1280,
+    vision_tokens=1601,          # one tile of 1600 patches + CLS
+    rope_theta=500_000.0,
+    source="hf:meta-llama/Llama-3.2-90B-Vision (unverified)",
+)

@@ -1,0 +1,17 @@
+from repro.configs.base import ArchConfig
+
+# Mistral-Large-2407 (123B): 88L, d_model 12288, 96H (GQA kv=8), d_ff 28672,
+# vocab 32768.
+CONFIG = ArchConfig(
+    name="mistral-large-123b",
+    family="dense",
+    n_layers=88,
+    d_model=12_288,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=28_672,
+    vocab=32_768,
+    head_dim=128,
+    rope_theta=1_000_000.0,
+    source="hf:mistralai/Mistral-Large-Instruct-2407 (unverified)",
+)

@@ -1,0 +1,17 @@
+from repro.configs.base import ArchConfig
+
+# Moonlight-16B-A3B (Kimi/Moonshot): 48L, d_model 2048, 16 heads (GQA kv=16),
+# d_ff 1408 per expert, vocab 163840, MoE 64 experts top-6.
+CONFIG = ArchConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab=163_840,
+    n_experts=64,
+    top_k=6,
+    source="hf:moonshotai/Moonlight-16B-A3B",
+)

@@ -1,0 +1,17 @@
+from repro.configs.base import ArchConfig
+
+# Qwen2.5-3B: 36L, d_model 2048, 16H (GQA kv=2), d_ff 11008, vocab 151936,
+# QKV bias.
+CONFIG = ArchConfig(
+    name="qwen2.5-3b",
+    family="dense",
+    n_layers=36,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=2,
+    d_ff=11_008,
+    vocab=151_936,
+    qkv_bias=True,
+    tie_embeddings=True,
+    source="hf:Qwen/Qwen2.5-3B",
+)

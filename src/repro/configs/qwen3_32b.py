@@ -1,0 +1,17 @@
+from repro.configs.base import ArchConfig
+
+# Qwen3-32B: 64L, d_model 5120, 64H (GQA kv=8), d_ff 25600, vocab 151936,
+# qk_norm enabled.
+CONFIG = ArchConfig(
+    name="qwen3-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=25_600,
+    vocab=151_936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    source="hf:Qwen/Qwen3-8B (scaled per assignment)",
+)

@@ -1,0 +1,17 @@
+from repro.configs.base import ArchConfig
+
+# RWKV-6 "Finch" 1.6B: 24L, d_model 2048, attention-free (WKV state),
+# d_ff 7168, vocab 65536, data-dependent decay.
+CONFIG = ArchConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,            # WKV heads (head_dim 64)
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=7168,
+    vocab=65_536,
+    attn_free=True,
+    source="arXiv:2404.05892 (unverified)",
+)

@@ -1,0 +1,49 @@
+"""Assigned input shapes and (arch × shape) applicability rules."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+SHAPE_IDS = list(SHAPES)
+
+
+def cell_status(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runnable, reason).  Skip rules per the assignment:
+    * long_500k needs sub-quadratic attention — skipped for pure
+      full-attention archs (dense/moe/vlm), run for ssm/hybrid;
+    * encoder-only archs have no decode step — decode shapes skipped."""
+    if shape.kind == "decode" and cfg.encoder_only:
+        return False, "encoder-only: no decode step"
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full quadratic attention: 500k context skipped (DESIGN.md §4)"
+    return True, ""
+
+
+def microbatches_for(cfg: ArchConfig, shape: ShapeSpec) -> int:
+    """Gradient-accumulation factor for training cells: bounds activation +
+    MoE dispatch-buffer memory per device (DESIGN.md §3)."""
+    if shape.kind != "train":
+        return 1
+    tokens = shape.seq_len * shape.global_batch
+    if cfg.n_experts:
+        return max(1, tokens // (128 * 1024))     # ≤128k tokens per microbatch
+    if cfg.d_model >= 8192:
+        return max(1, shape.global_batch // 32)   # big dense: 32-seq microbatch
+    return max(1, shape.global_batch // 64)

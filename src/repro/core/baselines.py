@@ -1,0 +1,184 @@
+"""Baselines the paper compares against (Table I / §VI).
+
+* ``mochy_static``     — MoCHy-style full static recount of hyperedge triads
+                         (the paper reruns MoCHy per batch; we rerun the same
+                         counting engine over the full live region, excluding
+                         any incremental machinery).
+* ``thyme_static``     — THyMe+-style full static recount of temporal triads.
+* ``stathyper_static`` — StatHyper-style full static recount of vertex triads.
+* ``mochy_cpu``        — NumPy single-stream recount (stands in for the
+                         shared-memory CPU baselines; same algorithm, host
+                         execution, no batching/vectorised device parallelism).
+* ``Pow2Store``        — Hornet-like dynamic store: power-of-two capacity per
+                         list, growth *copies* the whole list into a larger
+                         block (the memcpy behaviour Fig. 16 attributes to
+                         Hornet), vs ESCHER's copy-free granule blocks +
+                         chaining.  Tracks bytes moved for the Fig. 16 ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import motifs
+from repro.core import triads as T
+from repro.core import vertex_triads as VT
+from repro.core.hypergraph import Hypergraph
+
+
+def mochy_static(hg: Hypergraph, *, max_deg: int, max_region: int, chunk: int = 1024,
+                 backend: str | None = None):
+    r, m = T.all_live_region(hg, max_region)
+    return T.count_triads(hg, r, m, max_deg=max_deg, chunk=chunk, backend=backend)
+
+
+def thyme_static(hg: Hypergraph, times, window, *, max_deg: int, max_region: int,
+                 chunk: int = 1024, backend: str | None = None):
+    r, m = T.all_live_region(hg, max_region)
+    return T.count_triads(hg, r, m, max_deg=max_deg, chunk=chunk,
+                          temporal=True, times=times, window=window, backend=backend)
+
+
+def stathyper_static(hg: Hypergraph, v_total, *, max_nb: int, max_region: int,
+                     chunk: int = 1024, backend: str | None = None):
+    vids = jnp.arange(max_region, dtype=jnp.int32)
+    mask = vids < jnp.asarray(v_total, jnp.int32)
+    return VT.count_vertex_triads(hg, vids, mask, v_total, max_nb=max_nb, chunk=chunk,
+                                  backend=backend)
+
+
+# --------------------------------------------------------------------------
+# Host (NumPy) recount — stands in for the shared-memory CPU baselines
+# --------------------------------------------------------------------------
+def mochy_cpu(edge_sets: list[set[int]]) -> np.ndarray:
+    """Single-stream MoCHy recount: line graph + per-pair candidate scan."""
+    n = len(edge_sets)
+    # vertex -> edges
+    v2e: dict[int, list[int]] = {}
+    for i, s in enumerate(edge_sets):
+        for v in s:
+            v2e.setdefault(v, []).append(i)
+    nbrs = [set() for _ in range(n)]
+    for ids in v2e.values():
+        for i in ids:
+            nbrs[i].update(ids)
+    for i in range(n):
+        nbrs[i].discard(i)
+    hist = np.zeros(motifs.NUM_CLASSES, np.int64)
+    for a in range(n):
+        for b in nbrs[a]:
+            if b <= a:
+                continue
+            sa, sb = edge_sets[a], edge_sets[b]
+            iab = len(sa & sb)
+            for c in nbrs[a] | nbrs[b]:
+                if c == a or c == b:
+                    continue
+                sc = edge_sets[c]
+                iac, ibc = len(sa & sc), len(sb & sc)
+                iabc = len(sa & sb & sc)
+                code = int(
+                    motifs.region_code(
+                        np.int32(len(sa)), np.int32(len(sb)), np.int32(len(sc)),
+                        np.int32(iab), np.int32(iac), np.int32(ibc), np.int32(iabc),
+                    )
+                )
+                cls = motifs.CLASS_ID[motifs.CANON[code]]
+                if cls < 0:
+                    continue
+                closed = iab > 0 and iac > 0 and ibc > 0
+                hist[cls] += 2 if closed else 3
+    return hist // 6
+
+
+# --------------------------------------------------------------------------
+# Hornet-like power-of-two store (Fig. 16 contrast)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class Pow2Store:
+    """Per-list power-of-two blocks; growth reallocates and memcpys."""
+
+    lists: dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
+    fill: dict[int, int] = dataclasses.field(default_factory=dict)
+    bytes_moved: int = 0
+    allocs: int = 0
+
+    @staticmethod
+    def _cap(n: int) -> int:
+        return 1 << max(1, int(np.ceil(np.log2(max(n, 1)))))
+
+    def insert_list(self, key: int, values: np.ndarray) -> None:
+        cap = self._cap(len(values))
+        buf = np.empty(cap, np.int32)
+        buf[: len(values)] = values
+        self.lists[key] = buf
+        self.fill[key] = len(values)
+        self.allocs += 1
+        self.bytes_moved += len(values) * 4
+
+    def delete_list(self, key: int) -> None:
+        self.lists.pop(key, None)
+        self.fill.pop(key, None)
+
+    def append(self, key: int, value: int) -> None:
+        buf, n = self.lists[key], self.fill[key]
+        if n >= len(buf):  # grow: realloc + copy (the Hornet cost model)
+            newbuf = np.empty(len(buf) * 2, np.int32)
+            newbuf[:n] = buf[:n]
+            self.bytes_moved += n * 4
+            self.allocs += 1
+            buf = newbuf
+            self.lists[key] = buf
+        buf[n] = value
+        self.fill[key] = n + 1
+        self.bytes_moved += 4
+
+    def remove(self, key: int, value: int) -> None:
+        buf, n = self.lists[key], self.fill[key]
+        idx = np.nonzero(buf[:n] == value)[0]
+        if len(idx):
+            i = int(idx[0])
+            buf[i : n - 1] = buf[i + 1 : n]
+            self.bytes_moved += (n - 1 - i) * 4
+            self.fill[key] = n - 1
+
+
+@dataclasses.dataclass
+class EscherHostModel:
+    """Host cost model of ESCHER's granule blocks + chaining (no realloc
+    copies; appends that overflow allocate a chained block instead)."""
+
+    granule: int = 32
+    fill: dict[int, int] = dataclasses.field(default_factory=dict)
+    caps: dict[int, int] = dataclasses.field(default_factory=dict)
+    bytes_moved: int = 0
+    allocs: int = 0
+
+    def _blk(self, n: int) -> int:
+        g = self.granule
+        return ((n + 1 + g - 1) // g) * g
+
+    def insert_list(self, key: int, values: np.ndarray) -> None:
+        self.fill[key] = len(values)
+        self.caps[key] = self._blk(len(values))
+        self.allocs += 1
+        self.bytes_moved += len(values) * 4
+
+    def delete_list(self, key: int) -> None:
+        self.fill.pop(key, None)
+        self.caps.pop(key, None)  # block stays allocated for reuse — no copy
+
+    def append(self, key: int, value: int) -> None:
+        n = self.fill[key]
+        if n + 1 > self.caps[key] - 1:
+            self.caps[key] += self.granule  # chain a block; NO copy of old data
+            self.allocs += 1
+        self.fill[key] = n + 1
+        self.bytes_moved += 4
+
+    def remove(self, key: int, value: int) -> None:
+        n = self.fill[key]
+        self.bytes_moved += max(n // 2, 1) * 4  # expected shift distance
+        self.fill[key] = n - 1

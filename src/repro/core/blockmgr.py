@@ -1,0 +1,198 @@
+"""Array-backed complete-binary-search-tree block manager (paper §III-A).
+
+The paper stores one node per hyperedge in a *complete* BST laid out as an
+array (heap order), each node carrying ``(h_id, start_addr, avail)`` where
+``avail`` counts free (deleted) blocks in the node's subtree.  We adapt the
+tree to a *perfect* BST padded to ``2^h - 1`` slots (dummy nodes carry
+``present=0, avail=0``): this makes the paper's Eq. (1) parallel placement a
+branch-free bit trick, keeps every shape static for XLA, and lets "tree
+reconstruction" (insertion Case 3) degenerate into activating pre-existing
+dummy slots — no data movement.  See DESIGN.md §2.
+
+Node arrays are 1-indexed heap layout and allocated with size ``2^(h+1)`` so
+children indices ``2i, 2i+1`` are always in-bounds (the phantom bottom level
+is permanently ``avail=0``), removing bounds checks from the hot loops.
+
+Local hyperedge IDs ("ranks") are consecutive integers ``0..n-1`` and double
+as the in-order position in the tree, exactly as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+INVALID = jnp.iinfo(jnp.int32).max  # sentinel hyperedge id for dummy nodes
+
+
+def tree_height(max_edges: int) -> int:
+    """Height h such that a perfect tree with 2^h - 1 nodes fits max_edges."""
+    return max(1, math.ceil(math.log2(max_edges + 1)))
+
+
+def cbt_index(rank, height: int):
+    """Closed-form heap index of in-order rank ``rank`` in a perfect BST.
+
+    This is the paper's Eq. (1) specialised to a perfect tree: with
+    ``t = rank + 1``, ``tz = trailing_zeros(t)``, the node depth is
+    ``height - 1 - tz`` and the heap index is ``2^depth + (rank >> (tz+1))``.
+    Branch-free, O(1), vectorises over ``rank``.
+    """
+    rank = jnp.asarray(rank, jnp.int32)
+    t = rank + 1
+    low = t & (-t)                                   # lowest set bit == 2^tz
+    # log2 of an exact power of two is exact in f32 for the whole int32 range
+    tz = jnp.int32(jnp.round(jnp.log2(low.astype(jnp.float32))))
+    depth = jnp.int32(height) - 1 - tz
+    return (jnp.int32(1) << depth) + (rank >> (tz + 1))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BlockManager:
+    """Perfect-CBT block manager. All per-node arrays are heap-indexed."""
+
+    hid: jax.Array      # int32[2^(h+1)] in-order rank stored at each node
+    addr0: jax.Array    # int32[...] start address of primary block (-1 dummy)
+    cap0: jax.Array     # int32[...] primary block capacity (slots incl. metadata)
+    addr1: jax.Array    # int32[...] overflow block start (-1 = none)
+    cap1: jax.Array     # int32[...] overflow block capacity
+    card: jax.Array     # int32[...] current cardinality of the hyperedge
+    present: jax.Array  # int32[...] 1 = live hyperedge
+    deleted: jax.Array  # int32[...] 1 = freed block available for reuse
+    avail: jax.Array    # int32[...] free blocks in subtree (incl. self)
+    height: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_slots(self) -> int:
+        return (1 << self.height) - 1
+
+    @property
+    def root_avail(self) -> jax.Array:
+        return self.avail[1]
+
+
+def build_manager(max_edges: int) -> BlockManager:
+    """Parallel construction (paper Fig. 4): every node placed independently
+    by the closed-form index map — a pure scatter, no sequential insert."""
+    h = tree_height(max_edges)
+    size = 1 << (h + 1)
+    ranks = jnp.arange((1 << h) - 1, dtype=jnp.int32)
+    idx = cbt_index(ranks, h)
+    hid = jnp.zeros(size, jnp.int32).at[idx].set(ranks)
+    zeros = jnp.zeros(size, jnp.int32)
+    return BlockManager(
+        hid=hid,
+        addr0=jnp.full(size, -1, jnp.int32),
+        cap0=zeros,
+        addr1=jnp.full(size, -1, jnp.int32),
+        cap1=zeros,
+        card=zeros,
+        present=zeros,
+        deleted=zeros,
+        avail=zeros,
+        height=h,
+    )
+
+
+def search(mgr: BlockManager, queries: jax.Array) -> jax.Array:
+    """Paper-faithful O(log|E|) BST descent for a batch of hyperedge ids.
+
+    Retained for fidelity/benchmarks; `cbt_index` gives the same answer in
+    O(1) (beyond-paper optimisation — see EXPERIMENTS.md §Perf-ESCHER).
+    """
+    h = mgr.height
+
+    def one(q):
+        def body(i, node):
+            v = mgr.hid[node]
+            go_right = v < q
+            go_left = v > q
+            nxt = jnp.where(go_right, 2 * node + 1, jnp.where(go_left, 2 * node, node))
+            return jnp.minimum(nxt, mgr.hid.shape[0] - 1)
+
+        return jax.lax.fori_loop(0, h, body, jnp.int32(1))
+
+    return jax.vmap(one)(queries.astype(jnp.int32))
+
+
+def _recompute_avail(mgr_avail, deleted, idx):
+    """avail[idx] = deleted[idx] + avail[left] + avail[right] (vectorised)."""
+    val = deleted[idx] + mgr_avail[2 * idx] + mgr_avail[2 * idx + 1]
+    return mgr_avail.at[idx].set(val)
+
+
+def propagate_avail(mgr: BlockManager, idxs: jax.Array, mask: jax.Array) -> BlockManager:
+    """Level-by-level upward recompute of ``avail`` along the affected paths
+    (paper Alg. 1 lines 13-19).  Duplicate parents recompute the same value,
+    so scatter collisions are benign.  ``height + 1`` sweeps guarantee the
+    deepest chain reaches the root with settled children.
+    """
+    safe = jnp.where(mask, idxs, 1).astype(jnp.int32)
+    avail = _recompute_avail(mgr.avail, mgr.deleted, safe)
+
+    def body(_, carry):
+        avail, cur = carry
+        cur = jnp.maximum(cur >> 1, 1)
+        avail = _recompute_avail(avail, mgr.deleted, cur)
+        return avail, cur
+
+    avail, _ = jax.lax.fori_loop(0, mgr.height + 1, body, (avail, safe))
+    return dataclasses.replace(mgr, avail=avail)
+
+
+def mark_delete(mgr: BlockManager, ranks: jax.Array, mask: jax.Array) -> BlockManager:
+    """Vertical delete (paper Alg. 1): mark nodes available, keep their block
+    pointers for reuse, propagate ``avail`` to the root.  No rebalancing —
+    the tree shape never changes (paper §III-B)."""
+    idx = cbt_index(ranks, mgr.height)
+    valid = mask & (mgr.present[idx] == 1)
+    idxs = jnp.where(valid, idx, 0)  # slot 0 is unused scratch
+    deleted = mgr.deleted.at[idxs].max(valid.astype(jnp.int32))
+    present = mgr.present.at[idxs].min(jnp.where(valid, 0, 1).astype(jnp.int32))
+    deleted = deleted.at[0].set(0)
+    present = present.at[0].set(0)
+    mgr = dataclasses.replace(mgr, deleted=deleted, present=present)
+    return propagate_avail(mgr, idx, valid)
+
+
+def find_kth_available(mgr: BlockManager, ks: jax.Array) -> jax.Array:
+    """Paper Alg. 2: thread j descends from the root to the j-th available
+    node, steered by the ``avail`` counters (in-order: left, self, right).
+    Returns heap indices; invalid for k > root avail (caller masks)."""
+
+    def one(k):
+        def body(_, state):
+            node, k, found = state
+            left = 2 * node
+            la = mgr.avail[left]
+            in_left = (k <= la) & ~found
+            here = (~in_left) & (k == la + mgr.deleted[node]) & (mgr.deleted[node] == 1) & ~found
+            k_next = jnp.where(in_left | found | here, k, k - la - mgr.deleted[node])
+            node_next = jnp.where(
+                found | here, node, jnp.where(in_left, left, 2 * node + 1)
+            )
+            node_next = jnp.minimum(node_next, mgr.hid.shape[0] // 2 - 1)
+            return node_next, k_next, found | here
+
+        node, _, _ = jax.lax.fori_loop(
+            0, mgr.height + 1, body, (jnp.int32(1), k.astype(jnp.int32), False)
+        )
+        return node
+
+    return jax.vmap(one)(ks)
+
+
+def claim_nodes(mgr: BlockManager, idxs: jax.Array, mask: jax.Array) -> BlockManager:
+    """Re-assign freed nodes to new hyperedges (insertion Case 1): clear the
+    deleted flag, mark present, propagate ``avail`` down-counts."""
+    safe = jnp.where(mask, idxs, 0).astype(jnp.int32)
+    deleted = mgr.deleted.at[safe].min(jnp.where(mask, 0, 1).astype(jnp.int32))
+    present = mgr.present.at[safe].max(mask.astype(jnp.int32))
+    deleted = deleted.at[0].set(0)
+    present = present.at[0].set(0)
+    mgr = dataclasses.replace(mgr, deleted=deleted, present=present)
+    return propagate_avail(mgr, jnp.where(mask, idxs, 1), mask)

@@ -1,0 +1,168 @@
+"""Two-way dynamic hypergraph = a pair of EscherStores (paper §III, Table II).
+
+The paper's single schema instantiates each mapping separately; "two-way
+dynamics" means a vertical op on h2v induces horizontal ops on v2h and vice
+versa.  This module owns that consistency:
+
+  * hyperedge insertion  -> h2v vertical insert + v2h horizontal inserts
+                            (the new hyperedge id joins each member vertex's
+                            incident list)
+  * hyperedge deletion   -> h2v vertical delete + v2h horizontal deletes
+  * incident-vertex ops  -> h2v horizontal + v2h horizontal (dual)
+
+Vertices are pre-registered ranks 0..num_vertices-1 in the v2h store (vertex
+vertical ops are supported through the same code path as h2v vertical ops).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ops
+from repro.core.store import EMPTY, EscherStore, init_store, read_dense, read_sorted
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Hypergraph:
+    h2v: EscherStore
+    v2h: EscherStore
+
+    @property
+    def n_edge_slots(self) -> int:
+        return (1 << self.h2v.mgr.height) - 1
+
+    @property
+    def num_vertices(self) -> int:
+        return (1 << self.v2h.mgr.height) - 1
+
+
+def from_lists(
+    edges: list[list[int]],
+    *,
+    num_vertices: int | None = None,
+    max_edges: int | None = None,
+    max_card: int | None = None,
+    max_vdeg: int | None = None,
+    granule: int = 32,
+    slack: float = 2.0,
+) -> Hypergraph:
+    """Host-side constructor from a Python list of vertex lists."""
+    n = len(edges)
+    if num_vertices is None:
+        num_vertices = 1 + max((max(e) for e in edges if e), default=0)
+    if max_edges is None:
+        max_edges = max(2 * n, 16)
+    if max_card is None:
+        max_card = max(max((len(e) for e in edges), default=1), 4)
+    cards = np.array([len(e) for e in edges], np.int32)
+    lists = np.full((n, max_card), EMPTY, np.int32)
+    for i, e in enumerate(edges):
+        lists[i, : len(e)] = sorted(e)
+    cap_h = int(slack * max(int((((cards + 1 + granule - 1) // granule) * granule).sum()), granule))
+    h2v = init_store(jnp.asarray(lists), jnp.asarray(cards),
+                     max_edges=max_edges, capacity=cap_h, granule=granule)
+
+    vdeg = np.zeros(num_vertices, np.int64)
+    for e in edges:
+        for v in e:
+            vdeg[v] += 1
+    if max_vdeg is None:
+        max_vdeg = max(int(vdeg.max(initial=1)) * 2, 8)
+    vlists = np.full((num_vertices, max_vdeg), EMPTY, np.int32)
+    fill = np.zeros(num_vertices, np.int64)
+    for j, e in enumerate(edges):
+        for v in e:
+            vlists[v, fill[v]] = j
+            fill[v] += 1
+    vcards = fill.astype(np.int32)
+    cap_v = int(slack * max(int((((vcards + 1 + granule - 1) // granule) * granule).sum()), granule))
+    v2h = init_store(jnp.asarray(vlists), jnp.asarray(vcards),
+                     max_edges=num_vertices, capacity=cap_v, granule=granule)
+    return Hypergraph(h2v=h2v, v2h=v2h)
+
+
+def _dual_updates(lists, ranks, mask, is_insert_flag):
+    """Flatten (hyperedge rank, member vertex) pairs into v2h horizontal ops."""
+    m, cmax = lists.shape
+    vids = lists.reshape(-1)
+    hids = jnp.repeat(ranks, cmax)
+    ok = jnp.repeat(mask, cmax) & (vids != EMPTY)
+    ins = jnp.full(vids.shape, is_insert_flag, bool)
+    # v2h: target list is the vertex, payload is the hyperedge id
+    return vids, hids, ins, ok
+
+
+def insert_hyperedges(hg: Hypergraph, lists, cards, mask) -> tuple[Hypergraph, jax.Array]:
+    h2v, ranks = ops.insert_hyperedges(hg.h2v, lists, cards, mask)
+    tgt, pay, ins, ok = _dual_updates(lists, jnp.maximum(ranks, 0), mask, True)
+    v2h = ops.apply_vertex_updates(hg.v2h, tgt, pay, ins, ok)
+    return Hypergraph(h2v=h2v, v2h=v2h), ranks
+
+
+def delete_hyperedges(hg: Hypergraph, ranks, mask) -> Hypergraph:
+    # capture member lists BEFORE the vertical delete
+    lists = read_dense(hg.h2v, jnp.maximum(ranks, 0))
+    h2v = ops.delete_hyperedges(hg.h2v, ranks, mask)
+    tgt, pay, ins, ok = _dual_updates(lists, jnp.maximum(ranks, 0), mask, False)
+    v2h = ops.apply_vertex_updates(hg.v2h, tgt, pay, ins, ok)
+    return Hypergraph(h2v=h2v, v2h=v2h)
+
+
+def apply_vertex_updates(hg: Hypergraph, hids, vids, is_insert, mask) -> Hypergraph:
+    """Incident-vertex (horizontal) batch, mirrored into both mappings."""
+    h2v = ops.apply_vertex_updates(hg.h2v, hids, vids, is_insert, mask)
+    v2h = ops.apply_vertex_updates(hg.v2h, vids, hids, is_insert, mask)
+    return Hypergraph(h2v=h2v, v2h=v2h)
+
+
+def update_batch(hg: Hypergraph, del_ranks, del_mask, ins_lists, ins_cards, ins_mask):
+    """One churn batch: deletions then insertions (paper Alg. 3 step 3)."""
+    hg = delete_hyperedges(hg, del_ranks, del_mask)
+    hg, new_ranks = insert_hyperedges(hg, ins_lists, ins_cards, ins_mask)
+    return hg, new_ranks
+
+
+# --------------------------------------------------------------------------
+# Derived views
+# --------------------------------------------------------------------------
+def neighbors(hg: Hypergraph, ranks: jax.Array, max_deg: int) -> jax.Array:
+    """Line-graph adjacency rows (h2h mapping, paper Fig. 2a): for each rank,
+    the hyperedges sharing >=1 vertex, EMPTY-padded, deduplicated, self
+    excluded.  Derived on demand from h2v ∘ v2h."""
+    vlists = read_dense(hg.h2v, ranks)                       # [m, cmax]
+    m, cmax = vlists.shape
+    flat_v = jnp.minimum(vlists.reshape(-1), hg.num_vertices - 1)
+    hlists = read_dense(hg.v2h, flat_v).reshape(m, cmax, -1)
+    cand = jnp.where((vlists == EMPTY)[:, :, None], EMPTY, hlists).reshape(m, -1)
+    cand = jnp.where(cand == ranks[:, None], EMPTY, cand)    # drop self
+    cand = jnp.sort(cand, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros((m, 1), bool), cand[:, 1:] == cand[:, :-1]], axis=1
+    )
+    cand = jnp.where(dup, EMPTY, cand)
+    cand = jnp.sort(cand, axis=1)
+    return cand[:, :max_deg]
+
+
+def live_ranks_host(hg: Hypergraph) -> np.ndarray:
+    """Host helper: ranks of live hyperedges (for tests/benchmarks)."""
+    mgr = hg.h2v.mgr
+    present = np.asarray(mgr.present)
+    hid = np.asarray(mgr.hid)
+    return np.sort(hid[np.nonzero(present)[0]])
+
+
+def to_python(hg: Hypergraph) -> dict[int, set[int]]:
+    """Host helper: materialise {rank: set(vertices)} for oracle comparison."""
+    ranks = live_ranks_host(hg)
+    if len(ranks) == 0:
+        return {}
+    rows = np.asarray(read_dense(hg.h2v, jnp.asarray(ranks)))
+    out = {}
+    for r, row in zip(ranks.tolist(), rows):
+        out[r] = set(row[row != EMPTY].tolist())
+    return out

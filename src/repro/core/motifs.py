@@ -1,0 +1,115 @@
+"""MoCHy motif classification tables (paper §II, Fig. 2a).
+
+A hyperedge triad (h_a, h_b, h_c) is classified by the emptiness pattern of
+the 7 Venn regions
+    (a\\(b∪c), b\\(a∪c), c\\(a∪b), (a∩b)\\c, (a∩c)\\b, (b∩c)\\a, a∩b∩c)
+encoded as a 7-bit integer (bit i = region i non-empty).  Of the 128
+patterns, those realisable by three distinct, non-empty, *connected*
+hyperedges collapse under S3 symmetry into exactly **26 classes** (20
+closed + 6 open) — matching MoCHy.  Tables are built once at import with
+plain Python and baked into jnp constants:
+
+  CANON[code]    -> canonical (orbit-minimal) code, any of the 128 inputs
+  CLASS_ID[code] -> 0..25 for valid canonical codes, -1 otherwise
+  CLASS_CLOSED[cls] -> 1 if the class has all three pairs adjacent
+
+Temporal triads (THyMe+) use the *ordered* pattern of the time-sorted triple
+instead of the canonical one: TEMPORAL_CLASS_ID maps every valid ordered
+code to a dense id.
+"""
+from __future__ import annotations
+
+from itertools import permutations, product
+
+import numpy as np
+
+_REG = ["a", "b", "c", "ab", "ac", "bc", "abc"]
+
+
+def _perm_pattern(pat, perm):
+    m = dict(zip("abc", perm))
+    out = {}
+    for k, v in zip(_REG, pat):
+        nk = "".join(sorted(m[ch] for ch in k))
+        out[nk] = v
+    return tuple(out[k] for k in _REG)
+
+
+def _valid(pat):
+    d = dict(zip(_REG, pat))
+    for x in "abc":
+        if not any(d[k] for k in _REG if x in k):
+            return False  # an empty hyperedge
+    adj = [d["ab"] or d["abc"], d["ac"] or d["abc"], d["bc"] or d["abc"]]
+    if sum(adj) < 2:
+        return False  # not a connected triple
+    for x, y in [("a", "b"), ("a", "c"), ("b", "c")]:
+        z = ({"a", "b", "c"} - {x, y}).pop()
+        if (
+            d[x] == 0
+            and d[y] == 0
+            and d["".join(sorted(x + z))] == 0
+            and d["".join(sorted(y + z))] == 0
+        ):
+            return False  # pattern forces two identical hyperedges
+    return True
+
+
+def _code(pat) -> int:
+    return sum(b << i for i, b in enumerate(pat))
+
+
+def _build():
+    canon = np.zeros(128, np.int32)
+    class_id = np.full(128, -1, np.int32)
+    classes: list[int] = []
+    closed: list[int] = []
+    temporal_id = np.full(128, -1, np.int32)
+    n_temporal = 0
+    for pat in product([0, 1], repeat=7):
+        code = _code(pat)
+        cpat = min(_perm_pattern(pat, p) for p in permutations("abc"))
+        canon[code] = _code(cpat)
+        if _valid(pat):
+            if temporal_id[code] < 0:
+                temporal_id[code] = n_temporal
+                n_temporal += 1
+    for pat in product([0, 1], repeat=7):
+        code = _code(pat)
+        if not _valid(pat):
+            continue
+        c = canon[code]
+        if class_id[c] < 0:
+            class_id[c] = len(classes)
+            classes.append(c)
+            d = dict(zip(_REG, pat))
+            # closed iff all three pairs adjacent — class property
+            cp = [(c >> 3) & 1 or (c >> 6) & 1, (c >> 4) & 1 or (c >> 6) & 1,
+                  (c >> 5) & 1 or (c >> 6) & 1]
+            closed.append(1 if sum(cp) == 3 else 0)
+        class_id[code] = class_id[c]
+    return canon, class_id, np.array(classes, np.int32), np.array(closed, np.int32), temporal_id, n_temporal
+
+
+CANON, CLASS_ID, CLASS_CODES, CLASS_CLOSED, TEMPORAL_CLASS_ID, NUM_TEMPORAL = _build()
+NUM_CLASSES = len(CLASS_CODES)
+assert NUM_CLASSES == 26, NUM_CLASSES
+
+
+def region_code(ca, cb, cc, iab, iac, ibc, iabc):
+    """7-bit emptiness code from cardinalities + intersection sizes.
+
+    All args are integer arrays (broadcastable).  Inclusion–exclusion gives
+    each exclusive region size; the bit is `size > 0`.
+    """
+    a_only = ca - iab - iac + iabc
+    b_only = cb - iab - ibc + iabc
+    c_only = cc - iac - ibc + iabc
+    ab = iab - iabc
+    ac = iac - iabc
+    bc = ibc - iabc
+    bits = [a_only, b_only, c_only, ab, ac, bc, iabc]
+    code = 0
+    for i, b in enumerate(bits):
+        code = code + ((b > 0).astype(np.int32) << i)
+    return code

@@ -1,0 +1,268 @@
+"""Vertical and horizontal batch operations on an EscherStore (paper §III-B).
+
+Every op is a pure function ``store -> store`` over fixed-shape batches with
+a validity mask; jitted callers donate the store so XLA updates in place.
+
+Vertical ops  : hyperedge deletion (Alg. 1) and insertion (Alg. 2 + the
+                three cases of Fig. 5).
+Horizontal ops: incident-vertex insertion/deletion, grouped by list id the
+                way the paper serialises each group onto one thread — here
+                each *round* applies at most one update per list, rounds run
+                until the batch drains.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blockmgr as bm
+from repro.core.store import EMPTY, END, EscherStore, block_size, encode_ptr
+
+
+# --------------------------------------------------------------------------
+# Vertical: deletion
+# --------------------------------------------------------------------------
+def delete_hyperedges(store: EscherStore, ranks: jax.Array, mask: jax.Array) -> EscherStore:
+    """Paper Alg. 1: O(1) bookkeeping per deletion — mark the tree node
+    available and propagate ``avail``.  Block contents stay untouched until
+    the block is reused (no per-element clearing)."""
+    mgr = bm.mark_delete(store.mgr, ranks, mask)
+    return dataclasses.replace(store, mgr=mgr)
+
+
+# --------------------------------------------------------------------------
+# Vertical: insertion (cases 1-3 of Fig. 5)
+# --------------------------------------------------------------------------
+def insert_hyperedges(
+    store: EscherStore,
+    lists: jax.Array,   # int32[m, max_card], EMPTY-padded
+    cards: jax.Array,   # int32[m]
+    mask: jax.Array,    # bool[m]
+) -> tuple[EscherStore, jax.Array]:
+    """Batch hyperedge insertion. Returns (store, assigned_ranks[m]).
+
+    Case 1: the first ``root_avail`` insertions reuse freed blocks located by
+            the parallel k-th-available descent (Alg. 2); the new hyperedge
+            takes over the freed node (ID reuse, no rebalancing).
+    Case 2: a reused block too small for the new cardinality gets ONE
+            overflow block bump-allocated from the free tail and chained via
+            the metadata slot.
+    Case 3: insertions beyond the available blocks get fresh blocks whose
+            starting addresses come from a parallel prefix sum; their tree
+            nodes are the pre-padded dummy slots of the perfect tree, so the
+            paper's "full reconstruction" is a pure activation here.
+    """
+    m, max_card = lists.shape
+    granule = store.granule
+    mgr = store.mgr
+    cards = cards.astype(jnp.int32)
+
+    navail = mgr.root_avail
+    k = jnp.cumsum(mask.astype(jnp.int32))                   # 1-based among valid
+    reuse = mask & (k <= navail)
+    fresh = mask & ~reuse
+
+    # ---- Case 1: locate + claim the k-th available nodes
+    reuse_idx = bm.find_kth_available(mgr, jnp.where(reuse, k, 1))
+    reuse_idx = jnp.where(reuse, reuse_idx, 0)
+    mgr = bm.claim_nodes(mgr, jnp.where(reuse, reuse_idx, 1), reuse)
+
+    # ---- Case 3: fresh ranks activate dummy slots in rank order
+    fresh_ord = jnp.cumsum(fresh.astype(jnp.int32)) - 1      # 0-based among fresh
+    fresh_rank = store.n_ranks + fresh_ord
+    slot_of_rank = (1 << mgr.height) - 1
+    rank_overflow = fresh & (fresh_rank >= slot_of_rank)
+    fresh_rank = jnp.minimum(fresh_rank, slot_of_rank - 1)
+    fresh_idx = bm.cbt_index(jnp.maximum(fresh_rank, 0), mgr.height)
+    fresh_idx = jnp.where(fresh, fresh_idx, 0)
+
+    node_idx = jnp.where(reuse, reuse_idx, fresh_idx)
+    ranks_out = jnp.where(mask, mgr.hid[node_idx], -1)
+
+    # ---- capacity planning per insertion
+    old_cap0 = mgr.cap0[node_idx]
+    old_a1 = mgr.addr1[node_idx]
+    old_cap1 = mgr.cap1[node_idx]
+    need_fresh_primary = fresh
+    # fresh primary block holds the whole list (single block, Case 3)
+    fresh_size = block_size(cards, granule)
+    # reused: usable = (cap0-1) + (cap1-1 if chained); overflow if short
+    usable_reuse = (old_cap0 - 1) + jnp.where(old_a1 >= 0, old_cap1 - 1, 0)
+    need_over = reuse & (cards > usable_reuse)
+    over_size = block_size(jnp.maximum(cards - (old_cap0 - 1), 0), granule)
+
+    # ---- bump allocation from the free tail via prefix sum (CUDA Thrust -> cumsum)
+    alloc_size = jnp.where(need_fresh_primary, fresh_size, 0) + jnp.where(need_over, over_size, 0)
+    offs = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(alloc_size, dtype=jnp.int32)])
+    base = store.free_ptr
+    alloc_start = base + offs[:-1]
+    new_free = base + offs[-1]
+    cap_overflow = new_free > store.capacity
+    error = store.error | jnp.int32(cap_overflow) | jnp.int32(jnp.any(rank_overflow))
+
+    a0 = jnp.where(need_fresh_primary, alloc_start, mgr.addr0[node_idx])
+    c0 = jnp.where(need_fresh_primary, fresh_size, old_cap0)
+    a1 = jnp.where(need_over, alloc_start, jnp.where(fresh, -1, old_a1))
+    c1 = jnp.where(need_over, over_size, jnp.where(fresh, 0, old_cap1))
+
+    # ---- write node table
+    safe = jnp.where(mask, node_idx, 0)
+    mgr = dataclasses.replace(
+        mgr,
+        addr0=mgr.addr0.at[safe].set(jnp.where(mask, a0, mgr.addr0[safe])),
+        cap0=mgr.cap0.at[safe].set(jnp.where(mask, c0, mgr.cap0[safe])),
+        addr1=mgr.addr1.at[safe].set(jnp.where(mask, a1, mgr.addr1[safe])),
+        cap1=mgr.cap1.at[safe].set(jnp.where(mask, c1, mgr.cap1[safe])),
+        card=mgr.card.at[safe].set(jnp.where(mask, cards, mgr.card[safe])),
+        present=mgr.present.at[safe].max(mask.astype(jnp.int32)),
+    )
+    mgr = dataclasses.replace(
+        mgr,
+        present=mgr.present.at[0].set(0),
+        deleted=mgr.deleted.at[0].set(0),
+    )
+
+    # ---- scatter the vertex payloads (primary then overflow positions)
+    A = store.A
+    slot = jnp.arange(max_card, dtype=jnp.int32)[None, :]
+    u0 = c0[:, None] - 1
+    pos = jnp.where(slot < u0, a0[:, None] + slot, a1[:, None] + (slot - u0))
+    ok = mask[:, None] & (slot < cards[:, None])
+    pos = jnp.where(ok, pos, store.capacity)
+    A = A.at[pos.reshape(-1)].set(lists.reshape(-1), mode="drop")
+    # wipe stale tail slots of reused blocks up to usable capacity
+    tail_ok = mask[:, None] & (slot >= cards[:, None]) & (slot < (c0[:, None] - 1) + jnp.where(a1[:, None] >= 0, c1[:, None] - 1, 0))
+    tail_pos = jnp.where(tail_ok, jnp.where(slot < u0, a0[:, None] + slot, a1[:, None] + (slot - u0)), store.capacity)
+    A = A.at[tail_pos.reshape(-1)].set(EMPTY, mode="drop")
+    # metadata: primary end -> chain pointer or END; overflow end -> END
+    meta0 = jnp.where(a1 >= 0, encode_ptr(a1), END)
+    A = A.at[jnp.where(mask, a0 + c0 - 1, store.capacity)].set(meta0, mode="drop")
+    A = A.at[jnp.where(mask & (a1 >= 0), a1 + c1 - 1, store.capacity)].set(END, mode="drop")
+
+    n_ranks = store.n_ranks + jnp.sum(fresh.astype(jnp.int32))
+    return (
+        dataclasses.replace(store, A=A, mgr=mgr, free_ptr=new_free, n_ranks=n_ranks, error=error),
+        ranks_out,
+    )
+
+
+# --------------------------------------------------------------------------
+# Horizontal: incident vertex insertion / deletion
+# --------------------------------------------------------------------------
+def _write_rows(store: EscherStore, node_idx, rows, cards, mask) -> EscherStore:
+    """Write whole (padded) rows back through the chain, growing the overflow
+    block when the new cardinality does not fit (horizontal overflow)."""
+    mgr = store.mgr
+    granule = store.granule
+    m, max_card = rows.shape
+    a0 = mgr.addr0[node_idx]
+    c0 = mgr.cap0[node_idx]
+    a1 = mgr.addr1[node_idx]
+    c1 = mgr.cap1[node_idx]
+    usable = (c0 - 1) + jnp.where(a1 >= 0, c1 - 1, 0)
+    need_grow = mask & (cards > usable)
+    # replacement overflow sized for the full remainder (old overflow leaks —
+    # same trade the paper makes when chaining from the free chunk)
+    grow_size = block_size(jnp.maximum(cards - (c0 - 1), 0), granule)
+    offs = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(jnp.where(need_grow, grow_size, 0), dtype=jnp.int32)])
+    alloc_start = store.free_ptr + offs[:-1]
+    new_free = store.free_ptr + offs[-1]
+    error = store.error | jnp.int32(new_free > store.capacity)
+
+    a1 = jnp.where(need_grow, alloc_start, a1)
+    c1 = jnp.where(need_grow, grow_size, c1)
+
+    safe = jnp.where(mask, node_idx, 0)
+    mgr = dataclasses.replace(
+        mgr,
+        addr1=mgr.addr1.at[safe].set(jnp.where(mask, a1, mgr.addr1[safe])),
+        cap1=mgr.cap1.at[safe].set(jnp.where(mask, c1, mgr.cap1[safe])),
+        card=mgr.card.at[safe].set(jnp.where(mask, cards, mgr.card[safe])),
+    )
+
+    A = store.A
+    slot = jnp.arange(max_card, dtype=jnp.int32)[None, :]
+    u0 = c0[:, None] - 1
+    pos = jnp.where(slot < u0, a0[:, None] + slot, a1[:, None] + (slot - u0))
+    ok = mask[:, None] & (slot < usable_rows_limit(c0, c1, a1)[:, None])
+    pos = jnp.where(ok, pos, store.capacity)
+    A = A.at[pos.reshape(-1)].set(rows.reshape(-1), mode="drop")
+    meta0 = jnp.where(a1 >= 0, encode_ptr(a1), END)
+    A = A.at[jnp.where(mask, a0 + c0 - 1, store.capacity)].set(meta0, mode="drop")
+    A = A.at[jnp.where(mask & (a1 >= 0), a1 + c1 - 1, store.capacity)].set(END, mode="drop")
+    return dataclasses.replace(store, A=A, mgr=mgr, free_ptr=new_free, error=error)
+
+
+def usable_rows_limit(c0, c1, a1):
+    return (c0 - 1) + jnp.where(a1 >= 0, c1 - 1, 0)
+
+
+def _apply_one_round(store: EscherStore, ranks, vids, is_insert, mask):
+    """At most one update per hyperedge: read row, edit, write back."""
+    from repro.core.store import read_dense
+
+    node_idx = bm.cbt_index(jnp.maximum(ranks, 0), store.mgr.height)
+    node_idx = jnp.where(mask, node_idx, 0)
+    rows = read_dense(store, jnp.where(mask, ranks, 0))
+    cards = store.mgr.card[node_idx]
+    max_card = rows.shape[1]
+    slot = jnp.arange(max_card, dtype=jnp.int32)[None, :]
+
+    # deletion: blank the first slot holding vid, then stable-compact
+    hit = (rows == vids[:, None]) & (slot < cards[:, None])
+    first_hit = jnp.argmax(hit, axis=1)
+    found = jnp.any(hit, axis=1) & ~is_insert & mask
+    rows_del = jnp.where(
+        (slot == first_hit[:, None]) & found[:, None], EMPTY, rows
+    )
+    order = jnp.argsort(rows_del == EMPTY, axis=1, stable=True)
+    rows_del = jnp.take_along_axis(rows_del, order, axis=1)
+
+    # insertion: append at position card (skip if already member or full)
+    already = jnp.any((rows == vids[:, None]) & (slot < cards[:, None]), axis=1)
+    can_ins = is_insert & mask & ~already & (cards < max_card)
+    rows_ins = jnp.where(
+        (slot == cards[:, None]) & can_ins[:, None], vids[:, None], rows_del
+    )
+    new_cards = cards - found.astype(jnp.int32) + can_ins.astype(jnp.int32)
+    touched = mask & (found | can_ins)
+    full = is_insert & mask & ~already & (cards >= max_card)
+    store = dataclasses.replace(store, error=store.error | jnp.int32(jnp.any(full)))
+    return _write_rows(store, node_idx, rows_ins, new_cards, touched)
+
+
+def apply_vertex_updates(
+    store: EscherStore,
+    ranks: jax.Array,      # int32[m] target list (hyperedge for h2v)
+    vids: jax.Array,       # int32[m] vertex to insert/delete
+    is_insert: jax.Array,  # bool[m]
+    mask: jax.Array,       # bool[m]
+) -> EscherStore:
+    """Batch horizontal update.  Updates are grouped by list id (the paper
+    runs one thread per group); round r applies the r-th update of every
+    group simultaneously, looping until the deepest group drains."""
+    m = ranks.shape[0]
+    keys = jnp.where(mask, ranks, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(keys, stable=True)
+    r_s, v_s, i_s, m_s = ranks[order], vids[order], is_insert[order], mask[order]
+    k_s = keys[order]                       # sorted grouping keys (masked -> MAX)
+    pos = jnp.arange(m, dtype=jnp.int32)
+    # within-group rank = position - first position of the group (sorted keys)
+    first = jnp.searchsorted(k_s, k_s, side="left").astype(jnp.int32)
+    within = pos - first
+    n_rounds = jnp.max(jnp.where(m_s, within, 0)) + 1
+
+    def cond(state):
+        store, r = state
+        return r < n_rounds
+
+    def body(state):
+        store, r = state
+        sel = m_s & (within == r)
+        store = _apply_one_round(store, r_s, v_s, i_s, sel)
+        return store, r + 1
+
+    store, _ = jax.lax.while_loop(cond, body, (store, jnp.int32(0)))
+    return store

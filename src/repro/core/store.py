@@ -1,0 +1,137 @@
+"""ESCHER flattened store (paper §III-A, Fig. 3).
+
+All incident lists live in one pre-allocated 1-D int32 array ``A``.  Each
+list owns a *primary* memory block sized ``ceil((d+1)/granule)*granule`` whose
+last slot is metadata: ``END`` (paper's -inf) or an encoded pointer to a
+single *overflow* block (insertion Case 2 chaining).  The block manager
+(``blockmgr``) indexes blocks; its per-node table also mirrors the chain
+(addr0/cap0/addr1/cap1) so reads are two bounded gathers instead of a
+pointer walk — the TPU-native adaptation of the paper's linked blocks
+(DESIGN.md §2).  The metadata slots in ``A`` are still maintained so the
+on-device layout matches the paper's Fig. 3 exactly.
+
+One ``EscherStore`` implements one mapping (h2v, v2h or h2h) — the paper's
+"single schema" (§III, Table II).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blockmgr as bm
+
+EMPTY = jnp.iinfo(jnp.int32).max  # unoccupied vertex slot
+END = -1                          # metadata: end of list (paper's -inf)
+
+
+def encode_ptr(addr):
+    """Metadata encoding of a chain pointer (must not collide with ids>=0)."""
+    return -(addr + 2)
+
+
+def decode_ptr(meta):
+    return -meta - 2
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EscherStore:
+    A: jax.Array          # int32[capacity] flattened memory
+    mgr: bm.BlockManager
+    free_ptr: jax.Array   # int32 scalar: bump pointer into the unindexed tail
+    n_ranks: jax.Array    # int32 scalar: number of local ids ever activated
+    error: jax.Array      # int32 scalar: sticky overflow flag (capacity/slots)
+    granule: int = dataclasses.field(metadata=dict(static=True))
+    max_card: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def capacity(self) -> int:
+        return self.A.shape[0]
+
+    @property
+    def n_live(self) -> jax.Array:
+        return jnp.sum(self.mgr.present)
+
+
+def block_size(card, granule: int):
+    """Paper's block sizing: ceil((d+1)/granule) * granule."""
+    card = jnp.asarray(card, jnp.int32)
+    return ((card + 1 + granule - 1) // granule) * granule
+
+
+def init_store(
+    lists: jax.Array,      # int32[n, max_card] vertex ids, EMPTY-padded
+    cards: jax.Array,      # int32[n]
+    *,
+    max_edges: int,
+    capacity: int,
+    granule: int = 32,
+) -> EscherStore:
+    """Hypergraph initialisation (paper §III-B): fully parallel — block sizes
+    via vectorised arithmetic, addresses via prefix sum, tree nodes placed by
+    the closed-form Eq. (1) map, vertices scattered in one shot."""
+    n, max_card = lists.shape
+    assert n <= max_edges
+    mgr = bm.build_manager(max_edges)
+    sizes = block_size(cards, granule)
+    addr = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(sizes, dtype=jnp.int32)])
+    starts, total = addr[:-1], addr[-1]
+
+    A = jnp.full(capacity, EMPTY, jnp.int32)
+    # scatter vertices: element (j, s) -> starts[j] + s, masked by s < card[j]
+    slot = jnp.arange(max_card, dtype=jnp.int32)[None, :]
+    pos = starts[:, None] + slot
+    valid = slot < cards[:, None]
+    pos = jnp.where(valid, pos, capacity)  # OOB drops (XLA scatter semantics)
+    A = A.at[pos.reshape(-1)].set(lists.reshape(-1), mode="drop")
+    # metadata slot at end of every primary block
+    A = A.at[starts + sizes - 1].set(END)
+
+    idx = bm.cbt_index(jnp.arange(n, dtype=jnp.int32), mgr.height)
+    mgr = dataclasses.replace(
+        mgr,
+        addr0=mgr.addr0.at[idx].set(starts),
+        cap0=mgr.cap0.at[idx].set(sizes),
+        card=mgr.card.at[idx].set(cards.astype(jnp.int32)),
+        present=mgr.present.at[idx].set(1),
+    )
+    return EscherStore(
+        A=A,
+        mgr=mgr,
+        free_ptr=total,
+        n_ranks=jnp.int32(n),
+        error=jnp.int32(0),
+        granule=granule,
+        max_card=max_card,
+    )
+
+
+def read_dense(store: EscherStore, ranks: jax.Array) -> jax.Array:
+    """Gather the (padded) incident lists of ``ranks`` -> int32[m, max_card].
+
+    Follows the primary block then the overflow chain; non-present ranks and
+    pad slots return EMPTY.  Two bounded gathers — no pointer chasing.
+    """
+    idx = bm.cbt_index(jnp.maximum(ranks, 0), store.mgr.height)
+    a0 = store.mgr.addr0[idx]
+    c0 = store.mgr.cap0[idx]
+    a1 = store.mgr.addr1[idx]
+    card = store.mgr.card[idx]
+    present = (store.mgr.present[idx] == 1) & (ranks >= 0)
+
+    slot = jnp.arange(store.max_card, dtype=jnp.int32)[None, :]
+    u0 = c0[:, None] - 1                       # usable slots in primary block
+    in_primary = slot < u0
+    pos = jnp.where(in_primary, a0[:, None] + slot, a1[:, None] + (slot - u0))
+    ok = present[:, None] & (slot < card[:, None])
+    pos = jnp.clip(pos, 0, store.capacity - 1)
+    vals = store.A[pos]
+    return jnp.where(ok, vals, EMPTY)
+
+
+def read_sorted(store: EscherStore, ranks: jax.Array) -> jax.Array:
+    """Dense read with rows sorted ascending (EMPTY pads to the end) — the
+    layout the intersection kernels expect."""
+    return jnp.sort(read_dense(store, ranks), axis=1)

@@ -1,0 +1,338 @@
+"""Hyperedge-based and temporal triad counting over a region (paper §III-C).
+
+Enumeration: for every *adjacent* unordered pair (a, b) with a < b inside the
+region, every third hyperedge c ∈ N(a) ∪ N(b) (deduplicated, region-
+restricted) yields a connected-triple probe.  A closed triple (all three
+pairs overlap) is generated exactly 3×, an open one exactly 2× — the final
+histogram divides per class by that multiplicity, exactly.
+
+Classification: the 7-region Venn emptiness code from cardinalities and
+pair/triple intersection sizes (kernels/ops intersections), mapped through
+the MoCHy 26-class tables (motifs.py).  Temporal mode instead time-orders
+each triple and uses the ordered-pattern table plus the `t_max−t_min ≤ δ`
+window (THyMe+ semantics).
+
+Everything is fixed-shape: the caller bounds the region (`max_region`),
+line-graph degree (`max_deg`), and the pair list is processed in chunks via
+``lax.map`` to bound memory.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import motifs
+from repro.core.hypergraph import Hypergraph, neighbors
+from repro.core.store import EMPTY, read_sorted
+from repro.kernels import ops as kops
+
+_CANON = jnp.asarray(motifs.CANON)
+_CLASS_ID = jnp.asarray(motifs.CLASS_ID)
+_CLASS_CLOSED = jnp.asarray(motifs.CLASS_CLOSED)
+_TEMPORAL_ID = jnp.asarray(motifs.TEMPORAL_CLASS_ID)
+
+
+def _member_bitmap(n_slots: int, ranks, mask):
+    bm = jnp.zeros(n_slots + 1, jnp.int32)
+    idx = jnp.where(mask, jnp.minimum(ranks, n_slots), n_slots)
+    return bm.at[idx].set(1).at[n_slots].set(0)
+
+
+def _restrict(vals, bitmap):
+    safe = jnp.minimum(vals, bitmap.shape[0] - 1)
+    ok = (vals != EMPTY) & (bitmap[safe] == 1)
+    return jnp.where(ok, vals, EMPTY)
+
+
+def _dedupe_sorted(row):
+    s = jnp.sort(row)
+    dup = jnp.concatenate([jnp.zeros_like(s[:1], bool), s[1:] == s[:-1]])
+    return jnp.sort(jnp.where(dup, EMPTY, s))
+
+
+def _ordered_code(ca, cb, cc, iab, iac, ibc, iabc, ta, tb, tc):
+    """Re-derive the 7-region code with (a,b,c) permuted into time order."""
+    # sort keys: (time, tiebreak already encoded by caller adding rank eps)
+    # compute permutation via pairwise comparisons
+    a_first = (ta <= tb) & (ta <= tc)
+    b_first = (~a_first) & (tb <= tc)
+    # remaining two ordered
+    def pick(fa, fb, fc):
+        return jnp.where(a_first, fa, jnp.where(b_first, fb, fc))
+
+    # For each of 3 choices of first, order the remaining two:
+    # helper returning (cx, cy, cz, ixy, ixz, iyz) for given first element
+    def order_rest(c1, c2, c3, i12, i13, i23, t2, t3):
+        swap = t3 < t2
+        cy = jnp.where(swap, c3, c2)
+        cz = jnp.where(swap, c2, c3)
+        ixy = jnp.where(swap, i13, i12)
+        ixz = jnp.where(swap, i12, i13)
+        iyz = i23
+        return c1, cy, cz, ixy, ixz, iyz
+
+    fa = order_rest(ca, cb, cc, iab, iac, ibc, tb, tc)
+    fb = order_rest(cb, ca, cc, iab, ibc, iac, ta, tc)
+    fc = order_rest(cc, ca, cb, iac, ibc, iab, ta, tb)
+    cx, cy, cz, ixy, ixz, iyz = (pick(x, y, z) for x, y, z in zip(fa, fb, fc))
+    return motifs.region_code(cx, cy, cz, ixy, ixz, iyz, iabc)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_deg", "chunk", "temporal", "backend"),
+)
+def count_triads(
+    hg: Hypergraph,
+    region_ranks: jax.Array,   # int32[R]
+    region_mask: jax.Array,    # bool[R]
+    *,
+    max_deg: int,
+    chunk: int = 1024,
+    temporal: bool = False,
+    times: jax.Array | None = None,   # int32[n_edge_slots], by rank
+    window: int | None = None,
+    backend: str | None = None,
+):
+    """Histogram of triad classes among triples wholly inside the region.
+    Returns int32[26] (or int32[NUM_TEMPORAL] in temporal mode)."""
+    n_slots = hg.n_edge_slots
+    bitmap = _member_bitmap(n_slots, region_ranks, region_mask)
+    ranks = jnp.where(region_mask, region_ranks, 0)
+
+    nbrs = neighbors(hg, ranks, max_deg)                  # [R, D]
+    nbrs = _restrict(nbrs, bitmap)
+    R, D = nbrs.shape
+    # rank -> region row, so chunks reuse these rows instead of recomputing
+    # the (v2h-expansion + dedupe-sort) neighbour derivation per pair (§E4)
+    row_of = jnp.zeros(n_slots + 1, jnp.int32).at[
+        jnp.where(region_mask, jnp.minimum(region_ranks, n_slots), n_slots)
+    ].set(jnp.arange(R, dtype=jnp.int32)).at[n_slots].set(0)
+
+    a_flat = jnp.repeat(ranks, D)
+    b_flat = nbrs.reshape(-1)
+    pair_ok = (
+        jnp.repeat(region_mask, D)
+        & (b_flat != EMPTY)
+        & (b_flat > a_flat)
+    )
+    b_safe = jnp.where(pair_ok, b_flat, 0)
+
+    P = a_flat.shape[0]
+    pad = (-P) % chunk
+    if pad:
+        a_flat = jnp.concatenate([a_flat, jnp.zeros(pad, jnp.int32)])
+        b_safe = jnp.concatenate([b_safe, jnp.zeros(pad, jnp.int32)])
+        pair_ok = jnp.concatenate([pair_ok, jnp.zeros(pad, bool)])
+    nchunk = a_flat.shape[0] // chunk
+
+    n_out = motifs.NUM_TEMPORAL if temporal else motifs.NUM_CLASSES
+    t_by_rank = times if times is not None else jnp.zeros(n_slots, jnp.int32)
+
+    def one_chunk(args):
+        a, b, ok = args
+        na = nbrs[row_of[jnp.minimum(a, n_slots)]]        # precomputed rows
+        nb = nbrs[row_of[jnp.minimum(b, n_slots)]]
+        cand = jnp.concatenate([na, nb], axis=1)          # [chunk, 2D]
+        cand = _restrict(cand, bitmap)
+        cand = jnp.where((cand == a[:, None]) | (cand == b[:, None]), EMPTY, cand)
+        cand = jax.vmap(_dedupe_sorted)(cand)
+        K = cand.shape[1]
+
+        A = read_sorted(hg.h2v, a)                        # [chunk, c]
+        B = read_sorted(hg.h2v, b)
+        c_safe = jnp.where(cand == EMPTY, 0, cand)
+        Cs = read_sorted(hg.h2v, c_safe.reshape(-1)).reshape(chunk, K, -1)
+
+        from repro.core import blockmgr as bm
+        card = hg.h2v.mgr.card
+        hidx = lambda r: bm.cbt_index(r, hg.h2v.mgr.height)
+        ca = card[hidx(a)]
+        cb = card[hidx(b)]
+        cc = card[hidx(c_safe)]
+
+        iab = kops.pair_intersect_count(A, B, backend=backend)            # [chunk]
+        iac = kops.stack_pair_intersect_count(A, Cs, backend=backend)     # [chunk, K]
+        ibc = kops.stack_pair_intersect_count(B, Cs, backend=backend)
+        iabc = kops.triple_intersect_count(A, B, Cs, backend=backend)
+
+        valid = ok[:, None] & (cand != EMPTY)
+        if temporal:
+            ta = t_by_rank[a][:, None]
+            tb = t_by_rank[b][:, None]
+            tc = t_by_rank[c_safe]
+            code = _ordered_code(
+                ca[:, None], cb[:, None], cc,
+                iab[:, None], iac, ibc, iabc, ta, tb, tc,
+            )
+            cls = _TEMPORAL_ID[code]
+            if window is not None:
+                tmax = jnp.maximum(jnp.maximum(ta, tb), tc)
+                tmin = jnp.minimum(jnp.minimum(ta, tb), tc)
+                valid &= (tmax - tmin) <= window
+            closed = (
+                (((code >> 3) & 1) | ((code >> 6) & 1))
+                + (((code >> 4) & 1) | ((code >> 6) & 1))
+                + (((code >> 5) & 1) | ((code >> 6) & 1))
+            ) == 3
+        else:
+            code = motifs.region_code(
+                ca[:, None], cb[:, None], cc, iab[:, None], iac, ibc, iabc
+            )
+            cls = _CLASS_ID[_CANON[code]]
+            closed = _CLASS_CLOSED[jnp.maximum(cls, 0)] == 1
+
+        valid &= cls >= 0
+        # accumulate raw with multiplicity weight 2 (open) / 3 (closed) fixed
+        # later: store open hits doubled*3 and closed *2 => common divisor 6
+        w = jnp.where(closed, 2, 3)                        # 6 / multiplicity
+        cls_safe = jnp.where(valid, cls, 0)
+        hist = jnp.zeros(n_out, jnp.int32).at[cls_safe.reshape(-1)].add(
+            jnp.where(valid, w, 0).reshape(-1)
+        )
+        return hist
+
+    hists = jax.lax.map(
+        one_chunk,
+        (
+            a_flat.reshape(nchunk, chunk),
+            b_safe.reshape(nchunk, chunk),
+            pair_ok.reshape(nchunk, chunk),
+        ),
+    )
+    return jnp.sum(hists, axis=0) // 6
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_deg", "chunk", "temporal", "backend"))
+def count_triads_containing(
+    hg: Hypergraph,
+    changed: jax.Array,      # int32[M] changed hyperedge ranks
+    mask: jax.Array,         # bool[M]
+    *,
+    max_deg: int,
+    chunk: int = 1024,
+    temporal: bool = False,
+    times: jax.Array | None = None,
+    window: int | None = None,
+    backend: str | None = None,
+):
+    """Histogram of triads that CONTAIN ≥1 changed hyperedge (each triple
+    counted once — §Perf iteration E2, and arguably the literal reading of
+    the paper's Alg. 3 steps 2/5).
+
+    Enumeration per changed edge c (skipping triples whose smallest changed
+    member is < c, so multi-changed triples count once):
+      (i)  {c, x, y} with x < y both ∈ N(c)      — c-centred or triangle;
+      (ii) {c, x, y} with x ∈ N(c), y ∈ N(x),
+           y ∉ N(c) ∪ {c}                        — x-centred open path.
+    Cost O(M · deg²) — independent of the 2-hop region size, which saturates
+    on overlap-heavy hypergraphs.
+    """
+    n_slots = hg.n_edge_slots
+    changed_map = jnp.zeros(n_slots + 1, jnp.int32)
+    safe_changed = jnp.where(mask, jnp.minimum(changed, n_slots), n_slots)
+    # store 1+rank to distinguish "not changed" (0)
+    changed_map = changed_map.at[safe_changed].set(
+        jnp.where(mask, changed + 1, 0)).at[n_slots].set(0)
+
+    c_ranks = jnp.where(mask, changed, 0)
+    nb_c = neighbors(hg, c_ranks, max_deg)                 # [M, D]
+    nb_c = jnp.where(mask[:, None], nb_c, EMPTY)
+    M, D = nb_c.shape
+
+    # ---- case (i): unordered pairs inside N(c)
+    iu, ju = jnp.triu_indices(D, k=1)
+    xi = nb_c[:, iu]                                        # [M, P1]
+    yi = nb_c[:, ju]
+    ci = jnp.broadcast_to(c_ranks[:, None], xi.shape)
+    ok_i = (xi != EMPTY) & (yi != EMPTY)
+
+    # ---- case (ii): x ∈ N(c), y ∈ N(x) \ (N(c) ∪ {c})
+    x_flat = jnp.where(nb_c.reshape(-1) == EMPTY, 0, nb_c.reshape(-1))
+    nb_x = neighbors(hg, x_flat, max_deg).reshape(M, D, D)  # [M, D, D]
+    y2 = nb_x
+    in_nc = jnp.any(
+        (y2[:, :, :, None] == nb_c[:, None, None, :]) & (nb_c != EMPTY)[:, None, None, :],
+        axis=-1)
+    ok_ii = (
+        (nb_c != EMPTY)[:, :, None]
+        & (y2 != EMPTY)
+        & ~in_nc
+        & (y2 != c_ranks[:, None, None])
+    )
+    x2 = jnp.broadcast_to(nb_c[:, :, None], y2.shape)
+    c2 = jnp.broadcast_to(c_ranks[:, None, None], y2.shape)
+
+    cs = jnp.concatenate([ci.reshape(-1), c2.reshape(-1)])
+    xs = jnp.concatenate([xi.reshape(-1), x2.reshape(-1)])
+    ys = jnp.concatenate([yi.reshape(-1), y2.reshape(-1)])
+    ok = jnp.concatenate([ok_i.reshape(-1), ok_ii.reshape(-1)])
+
+    # dedupe across changed members: count at the smallest changed member
+    def chg_rank(v):
+        return changed_map[jnp.minimum(jnp.where(v == EMPTY, n_slots, v), n_slots)] - 1
+    for other in (xs, ys):
+        r = chg_rank(other)
+        ok &= ~((r >= 0) & (r < cs))
+
+    xs = jnp.where(ok, xs, 0)
+    ys = jnp.where(ok, ys, 0)
+
+    P = cs.shape[0]
+    pad = (-P) % chunk
+    if pad:
+        z = lambda a, f: jnp.concatenate([a, jnp.full(pad, f, a.dtype)])
+        cs, xs, ys, ok = z(cs, 0), z(xs, 0), z(ys, 0), z(ok, False)
+    nchunk = cs.shape[0] // chunk
+
+    n_out = motifs.NUM_TEMPORAL if temporal else motifs.NUM_CLASSES
+    t_by_rank = times if times is not None else jnp.zeros(n_slots, jnp.int32)
+
+    def one_chunk(args):
+        a, b, c, okc = args
+        A = read_sorted(hg.h2v, a)
+        B = read_sorted(hg.h2v, b)
+        C = read_sorted(hg.h2v, c)[:, None, :]
+        from repro.core import blockmgr as bm
+        card = hg.h2v.mgr.card
+        hidx = lambda r: bm.cbt_index(r, hg.h2v.mgr.height)
+        ca, cb, cc = card[hidx(a)], card[hidx(b)], card[hidx(c)]
+        iab = kops.pair_intersect_count(A, B, backend=backend)
+        iac = kops.triple_intersect_count(A, A, C, backend=backend)[:, 0]
+        ibc = kops.triple_intersect_count(B, B, C, backend=backend)[:, 0]
+        iabc = kops.triple_intersect_count(A, B, C, backend=backend)[:, 0]
+        if temporal:
+            ta, tb, tc = t_by_rank[a], t_by_rank[b], t_by_rank[c]
+            code = _ordered_code(ca, cb, cc, iab, iac, ibc, iabc, ta, tb, tc)
+            cls = _TEMPORAL_ID[code]
+            valid = okc
+            if window is not None:
+                tmax = jnp.maximum(jnp.maximum(ta, tb), tc)
+                tmin = jnp.minimum(jnp.minimum(ta, tb), tc)
+                valid &= (tmax - tmin) <= window
+        else:
+            code = motifs.region_code(ca, cb, cc, iab, iac, ibc, iabc)
+            cls = _CLASS_ID[_CANON[code]]
+            valid = okc
+        valid &= cls >= 0
+        cls_safe = jnp.where(valid, cls, 0)
+        return jnp.zeros(n_out, jnp.int32).at[cls_safe].add(
+            valid.astype(jnp.int32))
+
+    hists = jax.lax.map(
+        one_chunk,
+        (cs.reshape(nchunk, chunk), xs.reshape(nchunk, chunk),
+         ys.reshape(nchunk, chunk), ok.reshape(nchunk, chunk)),
+    )
+    return jnp.sum(hists, axis=0)
+
+
+def all_live_region(hg: Hypergraph, max_region: int):
+    """(ranks, mask) covering every live hyperedge — full-recount region."""
+    mgr = hg.h2v.mgr
+    order = jnp.argsort(-mgr.present)
+    idx = order[:max_region]
+    return mgr.hid[idx], mgr.present[idx] == 1

@@ -1,0 +1,228 @@
+"""Dynamic triad-count update framework (paper Alg. 3).
+
+For a churn batch (Del, Ins):
+  Step 1  mark deletion-affected region = Del ∪ 1-hop ∪ 2-hop (old graph)
+  Step 2  count triads inside the affected region (old graph)
+  Step 3  apply the batch through ESCHER's vertical ops
+  Step 4  mark insertion-affected region (new graph)
+  Step 5  count triads inside the *union* region (new graph)
+  Step 6  count ← count − count_del + count_ins
+
+Deviation from the paper's lines 4/10 (recorded here deliberately): both
+counts run over the union Aff_Del ∪ Aff_Ins, not each side's own region.
+With per-side regions an unchanged triad wholly inside Aff_Ins \\ Aff_Del
+would be added but never subtracted; over the union every unchanged triad
+appears in both counts and telescopes exactly.  Validated against full
+recount in tests/test_update.py.
+
+The same driver handles hyperedge-based, temporal (timestamps ride along)
+and incident-vertex triads (region built over vertices instead).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hypergraph as H
+from repro.core import triads as T
+from repro.core import vertex_triads as VT
+from repro.core.hypergraph import Hypergraph, neighbors
+from repro.core.store import EMPTY, read_dense
+
+
+def _dedupe_pad(vals: jax.Array, max_out: int) -> tuple[jax.Array, jax.Array]:
+    s = jnp.sort(vals)
+    dup = jnp.concatenate([jnp.zeros_like(s[:1], bool), s[1:] == s[:-1]])
+    s = jnp.sort(jnp.where(dup, EMPTY, s))[:max_out]
+    return jnp.where(s == EMPTY, 0, s), s != EMPTY
+
+
+def affected_edges(
+    hg: Hypergraph, seeds: jax.Array, mask: jax.Array, *, max_deg: int, max_region: int
+):
+    """Seeds ∪ 1-hop ∪ 2-hop line-graph neighbourhood (Alg. 3 steps 1/4)."""
+    seeds = jnp.where(mask, seeds, EMPTY)
+    s_safe = jnp.where(mask, seeds, 0)
+    nb1 = neighbors(hg, s_safe, max_deg)
+    nb1 = jnp.where(mask[:, None], nb1, EMPTY)
+    nb1_flat = nb1.reshape(-1)
+    nb1_safe = jnp.where(nb1_flat == EMPTY, 0, nb1_flat)
+    nb2 = neighbors(hg, nb1_safe, max_deg)
+    nb2 = jnp.where((nb1_flat == EMPTY)[:, None], EMPTY, nb2)
+    allv = jnp.concatenate([seeds, nb1_flat, nb2.reshape(-1)])
+    return _dedupe_pad(allv, max_region)
+
+
+def affected_vertices(
+    hg: Hypergraph, edge_seeds: jax.Array, mask: jax.Array, *, max_nb: int, max_region: int
+):
+    """Members of changed hyperedges ∪ their co-members (1-hop closure is
+    sufficient for vertex-triad classification — DESIGN.md §3)."""
+    rows = read_dense(hg.h2v, jnp.where(mask, edge_seeds, 0))
+    rows = jnp.where(mask[:, None], rows, EMPTY)
+    flat = rows.reshape(-1)
+    f_safe = jnp.where(flat == EMPTY, 0, flat)
+    conb = VT.vertex_neighbors(hg, f_safe, max_nb)
+    conb = jnp.where((flat == EMPTY)[:, None], EMPTY, conb)
+    allv = jnp.concatenate([flat, conb.reshape(-1)])
+    return _dedupe_pad(allv, max_region)
+
+
+def _union_region(r1, m1, r2, m2, max_region):
+    allv = jnp.concatenate([jnp.where(m1, r1, EMPTY), jnp.where(m2, r2, EMPTY)])
+    return _dedupe_pad(allv, max_region)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_deg", "max_region", "chunk", "temporal", "window", "backend"),
+)
+def update_triad_counts(
+    hg: Hypergraph,
+    counts: jax.Array,
+    del_ranks: jax.Array,
+    del_mask: jax.Array,
+    ins_lists: jax.Array,
+    ins_cards: jax.Array,
+    ins_mask: jax.Array,
+    *,
+    max_deg: int,
+    max_region: int,
+    chunk: int = 1024,
+    temporal: bool = False,
+    times: jax.Array | None = None,       # by rank (old); updated for Ins
+    ins_times: jax.Array | None = None,   # int32[m] timestamps of insertions
+    window: int | None = None,
+    backend: str | None = None,
+):
+    """One churn batch for hyperedge-based (or temporal) triads.
+    Returns (hg', counts', times')."""
+    reg_d, md = affected_edges(hg, del_ranks, del_mask, max_deg=max_deg, max_region=max_region)
+
+    hg_new, new_ranks = H.update_batch(hg, del_ranks, del_mask, ins_lists, ins_cards, ins_mask)
+    if temporal:
+        times = jnp.asarray(times)
+        times_new = times.at[jnp.where(ins_mask, new_ranks, 0)].set(
+            jnp.where(ins_mask, ins_times, times[jnp.where(ins_mask, new_ranks, 0)])
+        )
+    else:
+        times_new = times
+
+    reg_i, mi = affected_edges(hg_new, new_ranks, ins_mask, max_deg=max_deg, max_region=max_region)
+    reg, m = _union_region(reg_d, md, reg_i, mi, max_region)
+
+    kw = dict(max_deg=max_deg, chunk=chunk, temporal=temporal, window=window, backend=backend)
+    c_del = T.count_triads(hg, reg, m, times=times, **kw)
+    c_ins = T.count_triads(hg_new, reg, m, times=times_new, **kw)
+    return hg_new, counts - c_del + c_ins, times_new
+
+
+def _bucket(n: int, lo: int, hi: int) -> int:
+    """Smallest power-of-two region size covering n (bounded)."""
+    b = lo
+    while b < n and b < hi:
+        b *= 2
+    return min(b, hi)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_deg", "max_region", "temporal"))
+def _regions_and_update(hg, del_ranks, del_mask, ins_lists, ins_cards,
+                        ins_mask, *, max_deg, max_region, temporal=False,
+                        times=None, ins_times=None):
+    reg_d, md = affected_edges(hg, del_ranks, del_mask, max_deg=max_deg,
+                               max_region=max_region)
+    hg_new, new_ranks = H.update_batch(hg, del_ranks, del_mask, ins_lists,
+                                       ins_cards, ins_mask)
+    if temporal:
+        times = jnp.asarray(times)
+        safe = jnp.where(ins_mask, new_ranks, 0)
+        times_new = times.at[safe].set(
+            jnp.where(ins_mask, ins_times, times[safe]))
+    else:
+        times_new = times
+    reg_i, mi = affected_edges(hg_new, new_ranks, ins_mask, max_deg=max_deg,
+                               max_region=max_region)
+    reg, m = _union_region(reg_d, md, reg_i, mi, max_region)
+    return hg_new, times_new, reg, m, jnp.sum(m.astype(jnp.int32))
+
+
+def update_triad_counts_delta(
+    hg, counts, del_ranks, del_mask, ins_lists, ins_cards, ins_mask, *,
+    max_deg, chunk=1024, temporal=False, times=None, ins_times=None,
+    window=None, backend=None,
+):
+    """Alg. 3 via *containing-triple* deltas (§Perf iteration E2): subtract
+    triads containing a deleted edge (old graph), add triads containing an
+    inserted edge (new graph).  Each changed triple counted exactly once;
+    O(|batch|·deg²) — immune to affected-region saturation.  Validated
+    against full recount in tests/test_update.py."""
+    kw = dict(max_deg=max_deg, chunk=chunk, temporal=temporal,
+              window=window, backend=backend)
+    c_del = T.count_triads_containing(hg, del_ranks, del_mask,
+                                      times=times, **kw)
+    hg_new, new_ranks = H.update_batch(hg, del_ranks, del_mask, ins_lists,
+                                       ins_cards, ins_mask)
+    if temporal:
+        times = jnp.asarray(times)
+        safe = jnp.where(ins_mask, new_ranks, 0)
+        times = times.at[safe].set(
+            jnp.where(ins_mask, ins_times, times[safe]))
+    c_ins = T.count_triads_containing(hg_new, new_ranks, ins_mask,
+                                      times=times, **kw)
+    return hg_new, counts - c_del + c_ins, times
+
+
+def update_triad_counts_auto(
+    hg, counts, del_ranks, del_mask, ins_lists, ins_cards, ins_mask, *,
+    max_deg, max_region, chunk=1024, min_region=64, temporal=False,
+    times=None, ins_times=None, window=None, backend=None,
+):
+    """Host-orchestrated Alg. 3 with *bucketed* region specialisation
+    (§Perf iteration E1): the affected region's true size is read back and
+    counting runs at the smallest power-of-two padded size that covers it,
+    so small batches cost O(|affected|·deg) instead of O(max_region·deg).
+    One jit specialisation per bucket — a handful across a run."""
+    hg_new, times_new, reg, m, n_aff = _regions_and_update(
+        hg, del_ranks, del_mask, ins_lists, ins_cards, ins_mask,
+        max_deg=max_deg, max_region=max_region, temporal=temporal,
+        times=times, ins_times=ins_times)
+    R = _bucket(int(n_aff), min_region, max_region)
+    kw = dict(max_deg=max_deg, chunk=min(chunk, max(R * 2, 256)),
+              temporal=temporal, window=window, backend=backend)
+    c_del = T.count_triads(hg, reg[:R], m[:R], times=times, **kw)
+    c_ins = T.count_triads(hg_new, reg[:R], m[:R], times=times_new, **kw)
+    return hg_new, counts - c_del + c_ins, times_new
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_nb", "max_region", "chunk", "backend")
+)
+def update_vertex_triad_counts(
+    hg: Hypergraph,
+    counts: jax.Array,       # int32[3]
+    v_total: jax.Array | int,
+    del_ranks: jax.Array,
+    del_mask: jax.Array,
+    ins_lists: jax.Array,
+    ins_cards: jax.Array,
+    ins_mask: jax.Array,
+    *,
+    max_nb: int,
+    max_region: int,
+    chunk: int = 1024,
+    backend: str | None = None,
+):
+    """One churn batch for incident-vertex triads. Returns (hg', counts')."""
+    reg_d, md = affected_vertices(hg, del_ranks, del_mask, max_nb=max_nb, max_region=max_region)
+    hg_new, new_ranks = H.update_batch(hg, del_ranks, del_mask, ins_lists, ins_cards, ins_mask)
+    reg_i, mi = affected_vertices(hg_new, new_ranks, ins_mask, max_nb=max_nb, max_region=max_region)
+    reg, m = _union_region(reg_d, md, reg_i, mi, max_region)
+
+    kw = dict(max_nb=max_nb, chunk=chunk, backend=backend)
+    c_del = VT.count_vertex_triads(hg, reg, m, v_total, **kw)
+    c_ins = VT.count_vertex_triads(hg_new, reg, m, v_total, **kw)
+    return hg_new, counts - c_del + c_ins

@@ -1,0 +1,27 @@
+"""Process-wide mesh registry.
+
+`jax.lax.with_sharding_constraint`-style ambient mesh discovery is not
+available for shard_map in this JAX version, so launchers register the mesh
+they run under and distribution-aware modules (MoE EP dispatch) pick it up.
+``None`` (tests, single-device smoke) selects the portable XLA path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+_MESH: Optional[jax.sharding.Mesh] = None
+
+
+def set_current_mesh(mesh: Optional[jax.sharding.Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def current_mesh() -> Optional[jax.sharding.Mesh]:
+    return _MESH
+
+
+def dp_axes(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,108 @@
+"""Logical-axis → mesh sharding rules (DP / TP / EP / SP / FSDP).
+
+Two parameter modes:
+  * ``tp``       — Megatron tensor parallelism on the "model" axis only;
+                   params replicated across "data"/"pod".  Right for small
+                   archs where params/16 fits HBM.
+  * ``fsdp_tp``  — 2-D sharding: the d_model ("embed") dimension shards over
+                   "data" (FSDP-style, XLA all-gathers weights per layer) and
+                   the head/ffn/vocab/expert dimension over "model".  Needed
+                   for ≥90B archs on 16 GB v5e chips (DESIGN.md §3).
+
+Activations: batch over ("pod", "data"); decode KV caches shard sequence
+over "model" and batch over "data" (SP for the 500k cell).  MoE experts ride
+the "model" axis (EP) in both modes.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+
+def _dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def param_rules(mode: str, mesh: Mesh) -> dict:
+    fsdp = "data" if mode == "fsdp_tp" else None
+    return {
+        L.EMBED: fsdp,
+        L.VOCAB: "model",
+        L.HEADS: "model",
+        L.KV: "model",
+        L.FFN: "model",
+        L.EXPERT: "model",
+        L.LAYER: None,
+        None: None,
+    }
+
+
+def _divisible(dim: int, axis, mesh: Mesh) -> bool:
+    if axis is None:
+        return True
+    return dim % mesh.shape[axis] == 0
+
+
+def param_pspec(spec: tuple, shape: tuple, mode: str, mesh: Mesh) -> P:
+    rules = param_rules(mode, mesh)
+    axes, used = [], set()
+    for dim, s in zip(shape, spec):
+        ax = rules.get(s)
+        # drop shardings that do not divide (e.g. vocab 32001, heads 25) —
+        # the flattened H*hd projections stay divisible so TP still applies —
+        # and duplicates: MoE expert tensors [L,E,D,F] map only E to "model"
+        # (EP), the F dim stays local to the expert shard
+        if ax is not None and (ax in used or not _divisible(dim, ax, mesh)):
+            ax = None
+        if ax is not None:
+            used.add(ax)
+        axes.append(ax)
+    return P(*axes)
+
+
+def param_shardings(specs: dict, params: dict, mode: str, mesh: Mesh) -> dict:
+    return {
+        k: NamedSharding(mesh, param_pspec(specs[k], params[k].shape, mode, mesh))
+        for k in params
+    }
+
+
+def abstract_params(params) -> dict:
+    return jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params
+    )
+
+
+def batch_pspec(mesh: Mesh, *, seq_sharded: bool = False) -> P:
+    if seq_sharded:  # SP: batch too small to split (long_500k)
+        return P(None, _dp_axes(mesh))
+    return P(_dp_axes(mesh), None)
+
+
+def cache_pspecs(cfg: ArchConfig, mesh: Mesh, batch: int) -> dict:
+    """KV/state cache shardings: [L, B, K, S, hd] — B over data, S over model."""
+    dp = "data"
+    b_ax = dp if batch % mesh.shape[dp] == 0 else None
+    kv = P(None, b_ax, None, "model", None)
+    out = dict(k=kv, v=kv)
+    if cfg.family == "hybrid":
+        out["ssm"] = P(None, b_ax, None, None, None)
+    if cfg.family == "ssm":
+        out = dict(
+            s=P(None, b_ax, "model" if cfg.n_heads % mesh.shape["model"] == 0 else None, None, None),
+            tm_prev=P(None, b_ax, None),
+            cm_prev=P(None, b_ax, None),
+        )
+    return out
+
+
+def mode_for(cfg: ArchConfig) -> str:
+    """fsdp_tp when TP-only weights would not fit a 16 GB chip."""
+    bytes_tp = cfg.param_count() * 2 / 16  # bf16, model=16
+    return "fsdp_tp" if bytes_tp > 6e9 else "tp"

@@ -1,0 +1,56 @@
+"""Jit'd public wrappers around the Pallas kernels with an XLA fallback.
+
+``backend="pallas"`` runs the real kernels (interpret=True off-TPU, compiled
+Mosaic on TPU); ``backend="xla"`` uses the pure-jnp oracles — bit-identical
+semantics, used on CPU hosts where interpret-mode would be slow, and as the
+lowering path for the multi-pod dry-run (Mosaic kernels only lower for TPU
+targets).  Default is resolved once from the platform.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import intersect as _pallas
+from repro.kernels import ref as _ref
+
+_DEFAULT = None
+
+
+def default_backend() -> str:
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = "pallas" if jax.default_backend() == "tpu" else "xla"
+    return _DEFAULT
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pair_intersect_count(x, y, *, backend: str | None = None):
+    backend = backend or default_backend()
+    if backend == "pallas":
+        return _pallas.pair_intersect_count(x, y, interpret=_interpret())
+    return _ref.pair_intersect_count(x, y)
+
+
+def membership(x, y, *, backend: str | None = None):
+    backend = backend or default_backend()
+    if backend == "pallas":
+        return _pallas.membership(x, y, interpret=_interpret())
+    return _ref.membership(x, y)
+
+
+def triple_intersect_count(a, b, cand, *, backend: str | None = None):
+    backend = backend or default_backend()
+    if backend == "pallas":
+        return _pallas.triple_intersect_count(a, b, cand, interpret=_interpret())
+    return _ref.triple_intersect_count(a, b, cand)
+
+
+def stack_pair_intersect_count(a, cand, *, backend: str | None = None):
+    backend = backend or default_backend()
+    if backend == "pallas":
+        return _pallas.stack_pair_intersect_count(a, cand, interpret=_interpret())
+    return _ref.stack_pair_intersect_count(a, cand)

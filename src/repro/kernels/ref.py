@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: each kernel's test sweeps shapes/dtypes
+and asserts allclose against the function of the same name here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = jnp.iinfo(jnp.int32).max
+
+
+def pair_intersect_count(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """|X_i ∩ Y_i| for batched padded sets. x, y: int32[n, c] (EMPTY pads).
+
+    Elements within a row are assumed distinct (set semantics).
+    """
+    eq = x[:, :, None] == y[:, None, :]
+    valid = (x[:, :, None] != EMPTY) & (y[:, None, :] != EMPTY)
+    return jnp.sum(eq & valid, axis=(1, 2)).astype(jnp.int32)
+
+
+def membership(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """For each element of X_i, whether it appears in Y_i. -> int32[n, c]."""
+    eq = (x[:, :, None] == y[:, None, :]) & (y[:, None, :] != EMPTY)
+    hit = jnp.any(eq, axis=2) & (x != EMPTY)
+    return hit.astype(jnp.int32)
+
+
+def stack_pair_intersect_count(a, cand):
+    """|A_i ∩ C_ik|. a: int32[n,c]; cand: int32[n,k,c] -> int32[n,k].
+    (= triple_intersect_count(a, a, cand) without the redundant A∈A
+    membership pass — §Perf iteration E3.)"""
+    eq = (a[:, None, :, None] == cand[:, :, None, :]) & (cand[:, :, None, :] != EMPTY)
+    in_c = jnp.any(eq, axis=3) & (a[:, None, :] != EMPTY)
+    return jnp.sum(in_c, axis=2).astype(jnp.int32)
+
+
+def triple_intersect_count(a, b, cand):
+    """|A_i ∩ B_i ∩ C_ik| for candidate stacks. a,b: int32[n,c]; cand:
+    int32[n,k,c] -> int32[n,k]."""
+    in_b = membership(a, b)                                # [n, c]
+    eq = (a[:, None, :, None] == cand[:, :, None, :]) & (cand[:, :, None, :] != EMPTY)
+    in_c = jnp.any(eq, axis=3) & (a[:, None, :] != EMPTY)  # [n, k, c]
+    return jnp.sum(in_c & (in_b[:, None, :] == 1), axis=2).astype(jnp.int32)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                    window: int | None = None):
+    """Reference attention. q,k,v: [b, h, s, d] (k/v may have fewer heads —
+    GQA is the caller's job; here heads match). f32 accumulation."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, k.astype(jnp.float32))
+    s_q, s_k = q.shape[2], k.shape[2]
+    pos_q = jnp.arange(s_q)[:, None] + (s_k - s_q)  # right-aligned decode offset
+    pos_k = jnp.arange(s_k)[None, :]
+    mask = jnp.ones((s_q, s_k), bool)
+    if causal:
+        mask &= pos_k <= pos_q
+    if window is not None:
+        mask &= pos_k > pos_q - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,295 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell for the production meshes and extract roofline inputs.
+
+Per cell:
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=…, out_shardings=…).lower(**specs)
+        compiled = lowered.compile()
+        memory_analysis / cost_analysis / collective-bytes HLO parse
+
+Single-pod (16×16) results feed EXPERIMENTS.md §Roofline; the 2×16×16 pass
+proves the "pod" axis shards.  No arrays are ever materialised —
+inputs are ShapeDtypeStructs and ``AOT lower/compile`` never allocates.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch ID] [--shape ID]
+        [--multi-pod] [--out results.json] [--attn-block Q,KV]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import shapes as SHP
+from repro.configs.base import ARCH_IDS, get_arch
+from repro.distributed import sharding as SH
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.roofline import analysis as RA
+from repro.roofline import hlo_parse as HP
+from repro.serve import serve_step as SRV
+from repro.train import optimizer as OPT
+from repro.train import train_step as TS
+
+PARAM_DTYPE = jnp.bfloat16
+
+
+def abstract_state_and_specs(cfg, *, train: bool):
+    """Abstract (never-materialised) params / train state + logical specs."""
+    cell = {}
+
+    def fn(key):
+        params, specs = api.init_params(cfg, key, PARAM_DTYPE)
+        cell["specs"] = specs
+        if not train:
+            return params
+        return dict(params=params, opt=OPT.init_state(params),
+                    step=jnp.zeros((), jnp.int32))
+
+    shapes = jax.eval_shape(fn, jax.random.PRNGKey(0))
+    return shapes, cell["specs"]
+
+
+def batch_specs(cfg, shape: SHP.ShapeSpec):
+    B, S = shape.global_batch, shape.seq_len
+    out = dict(
+        tokens=jax.ShapeDtypeStruct((B, S), jnp.int32),
+        labels=jax.ShapeDtypeStruct((B, S), jnp.int32),
+    )
+    if cfg.family == "vlm":
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_tokens, cfg.vision_embed_dim), PARAM_DTYPE)
+    if cfg.family == "audio":
+        out["audio_feats"] = jax.ShapeDtypeStruct(
+            (B, S, cfg.audio_feat_dim), PARAM_DTYPE)
+    return out
+
+
+def cache_specs(cfg, batch: int, max_seq: int):
+    shapes = jax.eval_shape(
+        lambda: api.init_decode_state(cfg, batch, max_seq, PARAM_DTYPE))
+    return shapes
+
+
+def input_specs(arch: str, shape_id: str):
+    """Public helper: ShapeDtypeStruct stand-ins for every model input of a
+    cell (assignment MULTI-POD DRY-RUN step 2)."""
+    cfg = get_arch(arch)
+    shape = SHP.SHAPES[shape_id]
+    if shape.kind == "train":
+        state, _ = abstract_state_and_specs(cfg, train=True)
+        return dict(state=state, batch=batch_specs(cfg, shape))
+    params, _ = abstract_state_and_specs(cfg, train=False)
+    cache = cache_specs(cfg, shape.global_batch, shape.seq_len)
+    if shape.kind == "prefill":
+        return dict(params=params,
+                    tokens=jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len), jnp.int32),
+                    cache=cache)
+    return dict(params=params,
+                token=jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+                cache=cache)
+
+
+def _extra_kw_specs(cfg, batch):
+    kw = {}
+    if cfg.family == "vlm":
+        kw["image_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.vision_tokens, cfg.vision_embed_dim), PARAM_DTYPE)
+    if cfg.family == "audio":
+        kw["audio_feats"] = jax.ShapeDtypeStruct(
+            (batch, 1, cfg.audio_feat_dim), PARAM_DTYPE)
+    return kw
+
+
+def build_cell(arch: str, shape_id: str, mesh):
+    """Returns (jitted_fn, example_args(kwargs of ShapeDtypeStruct))."""
+    cfg = get_arch(arch)
+    shape = SHP.SHAPES[shape_id]
+    mode = SH.mode_for(cfg)
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        state, specs = abstract_state_and_specs(cfg, train=True)
+        state_sh = TS.state_shardings(specs, state, mode, mesh)
+        bspec = batch_specs(cfg, shape)
+        bsh = {k: NamedSharding(mesh, P(dp, *([None] * (len(v.shape) - 1))))
+               for k, v in bspec.items()}
+        mb = SHP.microbatches_for(cfg, shape)
+        # full-recompute remat: the "dots" policy was measured WORSE here
+        # (saved-dot residual traffic > recompute savings, +27 GB live set —
+        # §Perf iteration M2, refuted)
+        step = TS.make_train_step(cfg, OPT.AdamWConfig(), microbatches=mb)
+        fn = jax.jit(
+            step,
+            in_shardings=(state_sh, bsh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+        )
+        return fn, (state, bspec), dict(microbatches=mb, mode=mode)
+
+    params, specs = abstract_state_and_specs(cfg, train=False)
+    p_sh = SH.param_shardings(specs, params, mode, mesh)
+    cache = cache_specs(cfg, shape.global_batch, shape.seq_len)
+    c_ps = SH.cache_pspecs(cfg, mesh, shape.global_batch)
+    cache_sh = {}
+    for k, v in cache.items():
+        ps = c_ps.get(k, P())
+        cache_sh[k] = NamedSharding(mesh, ps)
+
+    extra = _extra_kw_specs(cfg, shape.global_batch)
+
+    b_ax = dp if shape.global_batch % mesh.shape["data"] == 0 else None
+    extra_sh = {
+        k: NamedSharding(mesh, P(b_ax, *([None] * (len(v.shape) - 1))))
+        for k, v in extra.items()
+    }
+
+    if shape.kind == "prefill":
+        tok_sh = NamedSharding(mesh, P(b_ax, None))
+        if cfg.family == "vlm":
+            extra["image_embeds"] = jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.vision_tokens, cfg.vision_embed_dim), PARAM_DTYPE)
+        if cfg.family == "audio":
+            extra["audio_feats"] = jax.ShapeDtypeStruct(
+                (shape.global_batch, shape.seq_len, cfg.audio_feat_dim), PARAM_DTYPE)
+        extra_sh = {
+            k: NamedSharding(mesh, P(b_ax, *([None] * (len(v.shape) - 1))))
+            for k, v in extra.items()
+        }
+        prefill = SRV.make_prefill(cfg, shape.seq_len)
+        fn = jax.jit(
+            lambda params, tokens, cache, extra: prefill(params, tokens, cache, **extra),
+            in_shardings=(p_sh, tok_sh, cache_sh, extra_sh),
+            out_shardings=(None, cache_sh),
+            donate_argnums=(2,),
+        )
+        tokens = jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len), jnp.int32)
+        return fn, (params, tokens, cache, extra), dict(mode=mode)
+
+    # decode
+    tok_sh = NamedSharding(mesh, P(b_ax, None))
+    decode = SRV.make_decode(cfg)
+    fn = jax.jit(
+        lambda params, token, cache, pos, extra: decode(params, token, cache, pos, **extra),
+        in_shardings=(p_sh, tok_sh, cache_sh, NamedSharding(mesh, P()), extra_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(2,),
+    )
+    token = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return fn, (params, token, cache, pos, extra), dict(mode=mode)
+
+
+def model_flops(cfg, shape: SHP.ShapeSpec) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N = active params."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def run_cell(arch: str, shape_id: str, *, multi_pod: bool, hlo_dir=None):
+    cfg = get_arch(arch)
+    shape = SHP.SHAPES[shape_id]
+    ok, reason = SHP.cell_status(cfg, shape)
+    if not ok:
+        return dict(arch=arch, shape=shape_id, status="skip", reason=reason)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    from repro.distributed import context as CTX
+    try:
+        CTX.set_current_mesh(mesh)
+        with mesh:
+            fn, args, meta = build_cell(arch, shape_id, mesh)
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            cost = compiled.cost_analysis()
+            if isinstance(cost, list):
+                cost = cost[0]
+            try:
+                mem = compiled.memory_analysis()
+                mem_info = dict(
+                    argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+                    output_bytes=getattr(mem, "output_size_in_bytes", None),
+                    temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+                    code_bytes=getattr(mem, "generated_code_size_in_bytes", None),
+                )
+            except Exception:
+                mem_info = {}
+            hlo = compiled.as_text()
+            hc = HP.parse_hlo(hlo)
+            rl = RA.roofline_from_hlo(hc, chips=chips, model_flops=model_flops(cfg, shape))
+            if hlo_dir:
+                import pathlib
+                pathlib.Path(hlo_dir).mkdir(parents=True, exist_ok=True)
+                tag = "mp" if multi_pod else "sp"
+                (pathlib.Path(hlo_dir) / f"{arch}__{shape_id}__{tag}.hlo.txt").write_text(hlo)
+            return dict(
+                arch=arch, shape=shape_id, status="ok",
+                multi_pod=multi_pod, chips=chips, mode=meta.get("mode"),
+                microbatches=meta.get("microbatches", 1),
+                lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+                flops=rl.flops, bytes_hbm=rl.bytes_hbm,
+                bytes_collective=rl.bytes_collective,
+                collective_by_kind=hc.coll_bytes,
+                collective_ops=hc.coll_ops,
+                xla_cost=dict(flops=float(cost.get("flops", -1)),
+                              bytes=float(cost.get("bytes accessed", -1))),
+                compute_s=rl.compute_s, memory_s=rl.memory_s,
+                collective_s=rl.collective_s, dominant=rl.dominant,
+                model_flops=rl.model_flops, useful_ratio=rl.useful_ratio,
+                roofline_fraction=rl.roofline_fraction,
+                mem=mem_info,
+            )
+    except Exception as e:  # a failed cell is a bug — surface it loudly
+        return dict(arch=arch, shape=shape_id, status="error",
+                    multi_pod=multi_pod, error=f"{type(e).__name__}: {e}",
+                    trace=traceback.format_exc()[-2000:],
+                    elapsed_s=round(time.time() - t0, 1))
+    finally:
+        CTX.set_current_mesh(None)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None, choices=SHP.SHAPE_IDS + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.jsonl")
+    ap.add_argument("--hlo-dir", default=None)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else SHP.SHAPE_IDS
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    with open(args.out, "a") as f:
+        for arch in archs:
+            for shape_id in shapes:
+                for mp in meshes:
+                    res = run_cell(arch, shape_id, multi_pod=mp, hlo_dir=args.hlo_dir)
+                    f.write(json.dumps(res) + "\n")
+                    f.flush()
+                    status = res["status"]
+                    msg = res.get("dominant") or res.get("reason") or res.get("error", "")
+                    print(f"[{arch} × {shape_id} × {'2pod' if mp else '1pod'}] "
+                          f"{status}: {msg}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

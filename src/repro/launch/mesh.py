@@ -1,0 +1,21 @@
+"""Production meshes.  Functions, not module constants — importing this
+module never touches jax device state (the dry-run must set XLA_FLAGS before
+the first jax call)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 chips per pod (v5e); multi-pod adds a leading 2-pod axis used
+    only for data parallelism + hierarchical gradient reduction."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU smoke)."""
+    n = len(jax.devices())
+    mp = max(1, min(model_parallel, n))
+    return jax.make_mesh((n // mp, mp), ("data", "model"))

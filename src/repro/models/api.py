@@ -1,0 +1,36 @@
+"""Family dispatch: one API over the model zoo."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import hymba, rwkv6, transformer
+
+
+def module_for(cfg: ArchConfig):
+    if cfg.family == "ssm":
+        return rwkv6
+    if cfg.family == "hybrid":
+        return hymba
+    return transformer
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32):
+    return module_for(cfg).init_params(cfg, key, dtype)
+
+
+def forward(cfg: ArchConfig, params, tokens, **kw):
+    """Returns (logits, cache_or_state, aux)."""
+    mod = module_for(cfg)
+    if mod is rwkv6:
+        cache = kw.pop("cache", None)
+        kw.pop("cache_pos", None)
+        return rwkv6.forward(cfg, params, tokens, state=cache, **kw)
+    return mod.forward(cfg, params, tokens, **kw)
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    mod = module_for(cfg)
+    if mod is rwkv6:
+        return rwkv6.make_state(cfg, batch, dtype)
+    return mod.make_cache(cfg, batch, max_seq, dtype)

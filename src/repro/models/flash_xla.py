@@ -1,0 +1,189 @@
+"""Blockwise attention with a FlashAttention-2 style custom VJP, pure XLA.
+
+Without this, the VJP of the blockwise forward (scan over kv blocks) stacks
+every block's probability tile as scan residuals — materialising the full
+O(S²) score matrix in the backward pass and making every ≥4k-seq training
+cell memory-bound (measured: 268 of 378 TB/device/step on hymba train_4k,
+EXPERIMENTS.md §Perf iteration H1).  The fix is the standard flash backward:
+save only (out, logsumexp) per row, recompute score tiles blockwise for
+dq/dk/dv.  Forward bytes stay O(S·d + S²/blk·0), backward recomputes one
+tile at a time.
+
+Shapes: qg [B,K,G,Sq,hd] (GQA groups), kt/vt [B,K,Skv,hd]; `window` is a
+traced int32 scalar (1<<30 ≈ no window) so hybrid archs with per-layer
+windows share one trace.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+BLK_Q = 512
+BLK_KV = 1024
+NEG = -1e30
+
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _mask(qa, ka, window, Skv, masked: bool):
+    valid = ka[None, :] < Skv
+    if masked:
+        valid &= ka[None, :] <= qa[:, None]
+        valid &= ka[None, :] > qa[:, None] - window
+    return valid
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def flash_attention_xla(qg, kt, vt, q_abs, window, masked: bool, scale: float):
+    out, _ = _fwd_impl(qg, kt, vt, q_abs, window, masked, scale)
+    return out
+
+
+def _fwd_impl(qg, kt, vt, q_abs, window, masked, scale):
+    B, K, G, Sq, hd = qg.shape
+    Skv = kt.shape[2]
+    bq, bk = min(BLK_Q, Sq), min(BLK_KV, Skv)
+    qg_p = _pad_to(qg, 3, bq)
+    qa_p = _pad_to(q_abs.astype(jnp.int32), 0, bq)
+    kt_p = _pad_to(kt, 2, bk)
+    vt_p = _pad_to(vt, 2, bk)
+    nq, nk = qg_p.shape[3] // bq, kt_p.shape[2] // bk
+
+    qb = qg_p.reshape(B, K, G, nq, bq, hd).transpose(3, 0, 1, 2, 4, 5)
+    qa = qa_p.reshape(nq, bq)
+    kb = kt_p.reshape(B, K, nk, bk, hd).transpose(2, 0, 1, 3, 4)
+    vb = vt_p.reshape(B, K, nk, bk, hd).transpose(2, 0, 1, 3, 4)
+    ka = jnp.arange(nk * bk, dtype=jnp.int32).reshape(nk, bk)
+
+    def q_body(_, qin):
+        q, qa_i = qin
+        # bf16 tiles through the MXU, f32 softmax/accumulator state — the
+        # standard TPU flash mixed-precision recipe; halves tile HBM traffic
+        # (EXPERIMENTS.md §Perf iteration H3)
+        qf = (q.astype(jnp.float32) * scale).astype(jnp.bfloat16)
+
+        def kv_body(carry, kin):
+            m, l, acc = carry
+            k, v, ka_i = kin
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qf, k.astype(jnp.bfloat16),
+                           preferred_element_type=jnp.float32)
+            valid = _mask(qa_i, ka_i, window, Skv, masked)
+            s = jnp.where(valid[None, None, None], s, NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            vz = jnp.where((ka_i < Skv)[:, None], v.astype(jnp.bfloat16), 0)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p.astype(jnp.bfloat16), vz,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        init = (jnp.full((B, K, G, bq), NEG, jnp.float32),
+                jnp.zeros((B, K, G, bq), jnp.float32),
+                jnp.zeros((B, K, G, bq, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_body, init, (kb, vb, ka))
+        l_safe = jnp.maximum(l, 1e-30)
+        out = acc / l_safe[..., None]
+        lse = m + jnp.log(l_safe)
+        return None, (out, lse)
+
+    _, (outs, lses) = jax.lax.scan(q_body, None, (qb, qa))
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, K, G, nq * bq, hd)[:, :, :, :Sq]
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, K, G, nq * bq)[:, :, :, :Sq]
+    return out.astype(qg.dtype), lse
+
+
+def _fwd(qg, kt, vt, q_abs, window, masked, scale):
+    out, lse = _fwd_impl(qg, kt, vt, q_abs, window, masked, scale)
+    return out, (qg, kt, vt, q_abs, window, out, lse)
+
+
+def _bwd(masked, scale, res, dout):
+    qg, kt, vt, q_abs, window, out, lse = res
+    B, K, G, Sq, hd = qg.shape
+    Skv = kt.shape[2]
+    bq, bk = min(BLK_Q, Sq), min(BLK_KV, Skv)
+
+    # row term D = rowsum(dout ⊙ out)
+    dO = dout.astype(jnp.float32)
+    Drow = jnp.sum(dO * out.astype(jnp.float32), axis=-1)          # [B,K,G,Sq]
+
+    qg_p = _pad_to(qg, 3, bq)
+    dO_p = _pad_to(dO, 3, bq)
+    lse_p = _pad_to(lse, 3, bq)
+    Dr_p = _pad_to(Drow, 3, bq)
+    qa_p = _pad_to(q_abs.astype(jnp.int32), 0, bq)
+    kt_p = _pad_to(kt, 2, bk)
+    vt_p = _pad_to(vt, 2, bk)
+    nq, nk = qg_p.shape[3] // bq, kt_p.shape[2] // bk
+
+    qb = qg_p.reshape(B, K, G, nq, bq, hd).transpose(3, 0, 1, 2, 4, 5)
+    dOb = dO_p.reshape(B, K, G, nq, bq, hd).transpose(3, 0, 1, 2, 4, 5)
+    lseb = lse_p.reshape(B, K, G, nq, bq).transpose(3, 0, 1, 2, 4)
+    Drb = Dr_p.reshape(B, K, G, nq, bq).transpose(3, 0, 1, 2, 4)
+    qab = qa_p.reshape(nq, bq)
+    kb = kt_p.reshape(B, K, nk, bk, hd).transpose(2, 0, 1, 3, 4)
+    vb = vt_p.reshape(B, K, nk, bk, hd).transpose(2, 0, 1, 3, 4)
+    kab = jnp.arange(nk * bk, dtype=jnp.int32).reshape(nk, bk)
+
+    def kv_body(dq_acc, kin):
+        k, v, ka_i = kin
+        kf = k.astype(jnp.bfloat16)
+        vf = jnp.where((ka_i < Skv)[:, None], v.astype(jnp.bfloat16), 0)
+
+        def q_body(carry, qin):
+            dk, dv, dq_acc = carry
+            q, dO_i, lse_i, Dr_i, qa_i, qidx = qin
+            qf = (q.astype(jnp.float32) * scale).astype(jnp.bfloat16)
+            dOb = dO_i.astype(jnp.bfloat16)
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qf, kf,
+                           preferred_element_type=jnp.float32)
+            valid = _mask(qa_i, ka_i, window, Skv, masked)
+            p = jnp.where(valid[None, None, None],
+                          jnp.exp(s - lse_i[..., None]), 0.0)   # [B,K,G,bq,bk]
+            dv = dv + jnp.einsum("bkgqs,bkgqd->bksd", p.astype(jnp.bfloat16),
+                                 dOb, preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bkgqd,bksd->bkgqs", dOb, vf,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - Dr_i[..., None])                      # [B,K,G,bq,bk]
+            dsb = ds.astype(jnp.bfloat16)
+            dk = dk + jnp.einsum("bkgqs,bkgqd->bksd", dsb, qf,
+                                 preferred_element_type=jnp.float32)
+            dq_blk = jnp.einsum("bkgqs,bksd->bkgqd", dsb, kf,
+                                preferred_element_type=jnp.float32) * scale
+            dq_acc = jax.lax.dynamic_update_slice(
+                dq_acc,
+                (jax.lax.dynamic_slice(
+                    dq_acc, (0, 0, 0, qidx * bq, 0), (B, K, G, bq, hd))
+                 + dq_blk),
+                (0, 0, 0, qidx * bq, 0))
+            return (dk, dv, dq_acc), None
+
+        init = (jnp.zeros((B, K, bk, hd), jnp.float32),
+                jnp.zeros((B, K, bk, hd), jnp.float32),
+                dq_acc)
+        (dk, dv, dq_acc), _ = jax.lax.scan(
+            q_body, init,
+            (qb, dOb, lseb, Drb, qab, jnp.arange(nq)))
+        return dq_acc, (dk, dv)
+
+    dq0 = jnp.zeros((B, K, G, nq * bq, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(kv_body, dq0, (kb, vb, kab))
+    dq = dq[:, :, :, :Sq].astype(qg.dtype)
+    dk = dks.transpose(1, 2, 0, 3, 4).reshape(B, K, nk * bk, hd)[:, :, :Skv].astype(kt.dtype)
+    dv = dvs.transpose(1, 2, 0, 3, 4).reshape(B, K, nk * bk, hd)[:, :, :Skv].astype(vt.dtype)
+    return dq, dk, dv, None, None
+
+
+flash_attention_xla.defvjp(_fwd, _bwd)

@@ -1,0 +1,121 @@
+"""Hymba: every layer runs attention heads and Mamba(SSD) heads in
+*parallel* on the same normed input, averages the two (per-branch RMS
+normed) outputs, then a SwiGLU MLP (arXiv:2411.13676).
+
+Attention is sliding-window except every ``global_layer_every``-th layer
+(full attention) — this is what makes the arch sub-quadratic enough for the
+long_500k cell (window KV + O(1) SSM state; the few global layers keep a
+full cache, sharded over the data axis at 500k).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import mamba as SSD
+from repro.models.layers import (EMBED, FFN, HEADS, KV, LAYER, NONE, VOCAB,
+                                 ParamBuilder, attention, attention_params,
+                                 mlp, mlp_params, rms_norm)
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32):
+    b = ParamBuilder(key, dtype)
+    D, F, V, L = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.n_layers
+    H, hd, n = cfg.n_heads, cfg.hd, cfg.ssm_state
+    di = H * hd
+    b.add("embed", (V, D), (VOCAB, EMBED), scale=0.02)
+    attention_params(b, cfg, "attn/", L)
+    # mamba branch
+    b.add("ssm/w_x", (L, D, di), (LAYER, EMBED, HEADS))
+    b.add("ssm/w_z", (L, D, di), (LAYER, EMBED, HEADS))
+    b.add("ssm/w_dt", (L, D, H), (LAYER, EMBED, HEADS))
+    b.add("ssm/dt_bias", (L, H), (LAYER, HEADS), zeros=True)
+    b.add("ssm/w_B", (L, D, n), (LAYER, EMBED, NONE))
+    b.add("ssm/w_C", (L, D, n), (LAYER, EMBED, NONE))
+    b.add("ssm/a_log", (L, H), (LAYER, HEADS), zeros=True)
+    b.add("ssm/w_out", (L, di, D), (LAYER, HEADS, EMBED))
+    b.add("norm_attn", (L, D), (LAYER, EMBED), ones=True)
+    b.add("norm_ssm", (L, D), (LAYER, EMBED), ones=True)
+    mlp_params(b, cfg, "mlp/", L)
+    b.add("ln1", (L, D), (LAYER, EMBED), ones=True)
+    b.add("ln2", (L, D), (LAYER, EMBED), ones=True)
+    b.add("final_norm", (D,), (EMBED,), ones=True)
+    b.add("lm_head", (D, V), (EMBED, VOCAB), scale=0.02)
+    return b.params, b.specs
+
+
+def _ssm_branch(cfg, sp, h, ssm_state, *, chunk):
+    B, T, D = h.shape
+    H, hd, n = cfg.n_heads, cfg.hd, cfg.ssm_state
+    xx = (h @ sp["w_x"]).reshape(B, T, H, hd).astype(jnp.float32)
+    z = jax.nn.silu(h @ sp["w_z"])
+    dt = jax.nn.softplus((h @ sp["w_dt"]).astype(jnp.float32) + sp["dt_bias"])
+    Bm = (h @ sp["w_B"]).astype(jnp.float32)          # [B,T,n], head-shared
+    Cm = (h @ sp["w_C"]).astype(jnp.float32)          # (§Perf iteration H5)
+    loga = -jnp.exp(sp["a_log"].astype(jnp.float32)) * dt     # [B,T,H]
+    if T == 1:
+        y, hT = SSD.ssd_step(xx[:, 0], dt[:, 0], Bm[:, 0], Cm[:, 0],
+                             loga[:, 0], ssm_state)
+        y = y[:, None]
+    else:
+        y, hT = SSD.ssd_chunked(xx, dt, Bm, Cm, loga, ssm_state, chunk)
+    y = y.reshape(B, T, H * hd).astype(h.dtype) * z
+    return y @ sp["w_out"], hT
+
+
+def make_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    L, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    return dict(
+        k=jnp.zeros((L, batch, K, max_seq, hd), dtype),
+        v=jnp.zeros((L, batch, K, max_seq, hd), dtype),
+        ssm=jnp.zeros((L, batch, cfg.n_heads, cfg.ssm_state, cfg.hd), jnp.float32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "chunk", "remat"))
+def forward(cfg: ArchConfig, params: dict, tokens, *, positions=None,
+            cache=None, cache_pos=None, chunk: int = 256, remat: bool = True,
+            image_embeds=None, audio_feats=None):
+    x = params["embed"][tokens]
+    B, T, D = x.shape
+    if positions is None:
+        positions = jnp.arange(T)
+
+    attn_p = {k.removeprefix("attn/"): v for k, v in params.items() if k.startswith("attn/")}
+    ssm_p = {k.removeprefix("ssm/"): v for k, v in params.items() if k.startswith("ssm/")}
+    mlp_p = {k.removeprefix("mlp/"): v for k, v in params.items() if k.startswith("mlp/")}
+    stacks = dict(attn=attn_p, ssm=ssm_p, mlp=mlp_p,
+                  norm_attn=params["norm_attn"], norm_ssm=params["norm_ssm"],
+                  ln1=params["ln1"], ln2=params["ln2"])
+    ssm_state = (cache["ssm"] if cache is not None
+                 else jnp.zeros((cfg.n_layers, B, cfg.n_heads, cfg.ssm_state, cfg.hd), jnp.float32))
+    kv = {"k": cache["k"], "v": cache["v"]} if cache is not None else None
+
+    def layer_body(x, xs):
+        lp, idx, s_l, kv_l = xs
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        is_global = (idx % cfg.global_layer_every) == 0 if cfg.global_layer_every else False
+        win = jnp.where(is_global, jnp.int32(1 << 30), jnp.int32(cfg.sliding_window))
+        a_out, new_kv = attention(lp["attn"], cfg, h, positions,
+                                  cache=kv_l, cache_pos=cache_pos, window=win)
+        m_out, new_s = _ssm_branch(cfg, lp["ssm"], h, s_l, chunk=chunk)
+        mixed = 0.5 * (rms_norm(a_out, lp["norm_attn"], cfg.norm_eps)
+                       + rms_norm(m_out, lp["norm_ssm"], cfg.norm_eps))
+        x = x + mixed
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + mlp(lp["mlp"], h)
+        return x, (new_s, new_kv)
+
+    body = jax.checkpoint(layer_body) if remat else layer_body
+    x, (s_new, kv_new) = jax.lax.scan(
+        body, x, (stacks, jnp.arange(cfg.n_layers), ssm_state, kv))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(k=kv_new["k"], v=kv_new["v"], ssm=s_new)
+    return logits, new_cache, jnp.float32(0.0)

@@ -1,0 +1,264 @@
+"""Shared neural layers (pure JAX, param pytrees + logical sharding specs).
+
+Params are plain dicts of jnp arrays.  Every creator returns
+``(params, specs)`` with identical tree structure; a spec is a tuple of
+*logical* axis names resolved by ``distributed/sharding.py`` onto the mesh
+("model" axis for TP/EP, None for replicated).  No flax — keeps lowering
+fully transparent for the dry-run and roofline parsing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+# logical axis vocabulary
+EMBED = "embed"        # d_model                   -> replicated
+VOCAB = "vocab"        # vocabulary                -> model
+HEADS = "heads"        # attention heads           -> model
+KV = "kv"              # kv heads                  -> model (grouped)
+FFN = "ffn"            # mlp hidden                -> model
+EXPERT = "expert"      # MoE experts               -> model (EP)
+LAYER = "layer"        # stacked scan axis         -> replicated
+NONE = None
+
+
+def uniform(key, shape, scale, dtype):
+    return jax.random.uniform(key, shape, dtype, -scale, scale)
+
+
+class ParamBuilder:
+    """Collects (name -> array, spec) pairs with a split PRNG stream."""
+
+    def __init__(self, key, dtype=jnp.float32):
+        self.key = key
+        self.dtype = dtype
+        self.params: dict = {}
+        self.specs: dict = {}
+
+    def add(self, name: str, shape, spec, *, scale=None, zeros=False, ones=False):
+        self.key, sub = jax.random.split(self.key)
+        if ones:
+            arr = jnp.ones(shape, self.dtype)
+        elif zeros:
+            arr = jnp.zeros(shape, self.dtype)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            s = scale if scale is not None else fan_in ** -0.5
+            arr = uniform(sub, shape, s, self.dtype)
+        self.params[name] = arr
+        self.specs[name] = spec
+        return arr
+
+
+def rms_norm(x, scale, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta):
+    """x: [..., S, H, hd]; positions: [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs      # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA, optional qk-norm / bias / sliding window / cross)
+# --------------------------------------------------------------------------
+def attention_params(b: ParamBuilder, cfg: ArchConfig, prefix: str, layers: int):
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    L = layers
+    b.add(f"{prefix}wq", (L, D, H * hd), (LAYER, EMBED, HEADS))
+    b.add(f"{prefix}wk", (L, D, K * hd), (LAYER, EMBED, KV))
+    b.add(f"{prefix}wv", (L, D, K * hd), (LAYER, EMBED, KV))
+    b.add(f"{prefix}wo", (L, H * hd, D), (LAYER, HEADS, EMBED))
+    if cfg.qkv_bias:
+        b.add(f"{prefix}bq", (L, H * hd), (LAYER, HEADS), zeros=True)
+        b.add(f"{prefix}bk", (L, K * hd), (LAYER, KV), zeros=True)
+        b.add(f"{prefix}bv", (L, K * hd), (LAYER, KV), zeros=True)
+    if cfg.qk_norm:
+        b.add(f"{prefix}q_norm", (L, hd), (LAYER, NONE), ones=True)
+        b.add(f"{prefix}k_norm", (L, hd), (LAYER, NONE), ones=True)
+
+
+def attention(
+    p: dict, cfg: ArchConfig, x, positions, *,
+    kv_x=None,                 # cross-attention source (defaults to x)
+    cache=None,                # dict(k,v) [B, K, S_max, hd] + write position
+    cache_pos=None,
+    causal=True,
+    window=None,
+    use_rope=True,
+):
+    """Returns (out [B,S,D], new_cache)."""
+    B, S, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", src, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", src, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, src.shape[1], K, hd)
+    v = v.reshape(B, src.shape[1], K, hd)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope and kv_x is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        # decode/prefill-into-cache: write new kv at cache_pos, attend over cache
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.transpose(0, 2, 1, 3).astype(cache["k"].dtype),
+            (0, 0, cache_pos, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.transpose(0, 2, 1, 3).astype(cache["v"].dtype),
+            (0, 0, cache_pos, 0))
+        new_cache = dict(k=ck, v=cv)
+        kt, vt = ck, cv
+        q_abs = cache_pos + jnp.arange(S)
+    else:
+        kt = k.transpose(0, 2, 1, 3)
+        vt = v.transpose(0, 2, 1, 3)
+        q_abs = positions if positions is not None else jnp.arange(S)
+    s_kv = kt.shape[2]
+
+    qt = q.transpose(0, 2, 1, 3)                              # [B, H, S, hd]
+    group = H // K
+    qg = qt.reshape(B, K, group, S, hd)
+    masked = kv_x is None and (causal or cache is not None)
+    if S * s_kv > _BLOCKWISE_THRESHOLD:
+        from repro.models.flash_xla import flash_attention_xla
+        win_arr = jnp.int32(1 << 30) if window is None else jnp.asarray(window, jnp.int32)
+        out = flash_attention_xla(
+            qg, kt, vt, jnp.asarray(q_abs, jnp.int32), win_arr,
+            masked, hd ** -0.5).astype(jnp.float32)
+    else:
+        logits = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                            kt.astype(jnp.float32)) * (hd ** -0.5)
+        if masked:
+            kv_abs = jnp.arange(s_kv)
+            mask = kv_abs[None, :] <= q_abs[:, None]
+            if window is not None:
+                mask = mask & (kv_abs[None, :] > q_abs[:, None] - window)
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkgqs,bksd->bkgqd", probs, vt.astype(jnp.float32))
+    out = out.reshape(B, H, S, hd).transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    out = jnp.einsum("bsh,hd->bsd", out.astype(x.dtype), p["wo"])
+    return out, new_cache
+
+
+# past this many logit elements per (B,K,G) the O(S·S_kv) score tensor no
+# longer fits HBM — switch to the blockwise online-softmax formulation
+_BLOCKWISE_THRESHOLD = 2048 * 2048
+_BLK_Q = 512
+_BLK_KV = 1024
+
+
+def _blockwise_attention(qg, kt, vt, q_abs, *, masked, window):
+    """Memory-bounded attention in pure XLA (flash-style online softmax,
+    scan over q blocks × kv blocks).  This is the lowering-anywhere twin of
+    kernels/flash_attention.py — the Pallas kernel is the TPU fast path, this
+    is what the dry-run and big-seq training lower (DESIGN.md §3).
+
+    qg: [B,K,G,Sq,hd]; kt/vt: [B,K,Skv,hd]; q_abs: int32[Sq]."""
+    B, K, G, Sq, hd = qg.shape
+    Skv = kt.shape[2]
+    bq = min(_BLK_Q, Sq)
+    bk = min(_BLK_KV, Skv)
+    nq, nk = -(-Sq // bq), -(-Skv // bk)
+    pad_kv = nk * bk - Skv
+    pad_q = nq * bq - Sq
+    if pad_q:
+        qg = jnp.pad(qg, ((0, 0),) * 3 + ((0, pad_q), (0, 0)))
+        q_abs = jnp.pad(q_abs, (0, pad_q))
+    if pad_kv:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+    scale = hd ** -0.5
+    kv_abs = jnp.arange(nk * bk)
+
+    q_blocks = qg.reshape(B, K, G, nq, bq, hd).transpose(3, 0, 1, 2, 4, 5)
+    qa_blocks = q_abs.reshape(nq, bq)
+    k_blocks = kt.reshape(B, K, nk, bk, hd).transpose(2, 0, 1, 3, 4)
+    v_blocks = vt.reshape(B, K, nk, bk, hd).transpose(2, 0, 1, 3, 4)
+    ka_blocks = kv_abs.reshape(nk, bk)
+
+    def q_body(_, q_in):
+        qb, qa = q_in                                   # [B,K,G,bq,hd], [bq]
+        qb = qb.astype(jnp.float32) * scale
+
+        def kv_body(carry, kv_in):
+            m, l, acc = carry
+            kb, vb, ka = kv_in
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qb, kb.astype(jnp.float32))
+            valid = ka[None, :] < Skv
+            if masked:
+                valid &= ka[None, :] <= qa[:, None]
+                if window is not None:
+                    valid &= ka[None, :] > qa[:, None] - window
+            s = jnp.where(valid[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p, vb.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        init = (
+            jnp.full((B, K, G, bq), -1e30, jnp.float32),
+            jnp.zeros((B, K, G, bq), jnp.float32),
+            jnp.zeros((B, K, G, bq, hd), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_body, init, (k_blocks, v_blocks, ka_blocks))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out
+
+    _, outs = jax.lax.scan(q_body, None, (q_blocks, qa_blocks))
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, K, G, -1, hd)
+    return out[:, :, :, :Sq]
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+def mlp_params(b: ParamBuilder, cfg: ArchConfig, prefix: str, layers: int):
+    D, F, L = cfg.d_model, cfg.d_ff, layers
+    b.add(f"{prefix}w_gate", (L, D, F), (LAYER, EMBED, FFN))
+    b.add(f"{prefix}w_up", (L, D, F), (LAYER, EMBED, FFN))
+    b.add(f"{prefix}w_down", (L, F, D), (LAYER, FFN, EMBED))
+
+
+def mlp(p: dict, x, prefix=""):
+    g = jnp.einsum("bsd,df->bsf", x, p[f"{prefix}w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p[f"{prefix}w_up"])
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("bsf,fd->bsd", h, p[f"{prefix}w_down"])
+
+
+def take_layer(params: dict, i, prefix: str = ""):
+    """Slice layer i out of every stacked [L, ...] param with the prefix."""
+    out = {}
+    for k, v in params.items():
+        if prefix and not k.startswith(prefix):
+            continue
+        out[k.removeprefix(prefix)] = v[i]
+    return out

@@ -1,0 +1,71 @@
+"""Selective SSM heads, Mamba-2 / SSD parameterisation (scalar decay per
+head per step) — the TPU-friendly chunked form (DESIGN.md §4: Hymba's Mamba
+heads are implemented with the SSD scalar-decay variant so the chunk math is
+a pair of batched matmuls instead of a per-channel [t,s,d,n] tensor).
+
+Per head (state n, head dim dh):
+    h_t = a_t · h_{t-1} + Δ_t · B_tᵀ x_t        a_t = exp(Δ_t · A) ∈ (0,1)
+    y_t = C_tᵀ h_t                               h ∈ R^{n×dh}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_step(x, dt, B, C, loga, h):
+    """x: [Bt,H,dh]; dt,loga: [Bt,H]; B,C: [Bt,n] (shared across heads —
+    Hymba projects one B/C per token); h: [Bt,H,n,dh]."""
+    h = h * jnp.exp(loga)[..., None, None] + jnp.einsum(
+        "bn,bhd,bh->bhnd", B, x, dt)
+    y = jnp.einsum("bn,bhnd->bhd", C, h)
+    return y, h
+
+
+def ssd_chunked(x, dt, B, C, loga, h0, chunk: int):
+    """x: [Bt,T,H,dh]; dt,loga: [Bt,T,H]; B,C: [Bt,T,n] (head-shared);
+    h0: [Bt,H,n,dh].  Returns (y [Bt,T,H,dh], hT).
+
+    Keeping B/C head-shared (instead of materialising the ×H repeat) cuts
+    the scan residual/input traffic by the head count (§Perf iteration H5).
+    """
+    Bt, T, H, dh = x.shape
+    n = B.shape[-1]
+    pad = (-T) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    Tp = x.shape[1]
+    nc = Tp // chunk
+    r4 = lambda a: a.reshape(Bt, nc, chunk, H, dh).transpose(1, 0, 3, 2, 4)
+    r3 = lambda a: a.reshape(Bt, nc, chunk, H).transpose(1, 0, 3, 2)
+    rn = lambda a: a.reshape(Bt, nc, chunk, n).transpose(1, 0, 2, 3)
+    xc, dtc, lac, Bc, Cc = r4(x), r3(dt), r3(loga), rn(B), rn(C)
+
+    @jax.checkpoint
+    def body(h, xs):
+        # remat: keep the scan VJP from stacking intra-chunk tensors
+        # (EXPERIMENTS.md §Perf iteration H2)
+        xx, dd, la, BB, CC = xs                      # xx [Bt,H,Lc,dh]; BB/CC [Bt,Lc,n]
+        cum = jnp.cumsum(la, axis=2)                 # inclusive, ≤ 0 cumulative
+        # inter-chunk: y_t += C_t · exp(cum_t) h_0
+        y = jnp.einsum("btn,bht,bhnd->bhtd", CC, jnp.exp(cum), h)
+        # intra-chunk: G[t,s] = C_t·B_s (head-shared), decay per head
+        G = jnp.einsum("btn,bsn->bts", CC, BB)
+        diff = cum[:, :, :, None] - cum[:, :, None, :]
+        tri = jnp.tril(jnp.ones((xx.shape[2], xx.shape[2]), bool))
+        Dm = jnp.where(tri[None, None], jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+        M = G[:, None] * Dm * dd[:, :, None, :]
+        y = y + jnp.einsum("bhts,bhsd->bhtd", M, xx)
+        # carry to chunk end
+        dec_end = jnp.exp(cum[:, :, -1:] - cum)      # [Bt,H,Lc]
+        h = h * jnp.exp(cum[:, :, -1])[..., None, None] + jnp.einsum(
+            "bsn,bhsd,bhs->bhnd", BB, xx, dd * dec_end)
+        return h, y
+
+    hT, ys = jax.lax.scan(body, h0, (xc, dtc, lac, Bc, Cc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(Bt, Tp, H, dh)
+    return y[:, :T], hT

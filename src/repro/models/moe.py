@@ -1,0 +1,167 @@
+"""Mixture-of-Experts FFN with sort-based (dropless-capacity) dispatch.
+
+TPU/SPMD-friendly formulation: token→expert assignments are sorted by
+expert, packed into a fixed [E, C, D] buffer (C = capacity), experts run as
+one grouped einsum with the expert axis sharded over "model" (EP), and
+results scatter back with combine weights.  Overflow beyond capacity is
+dropped (standard GShard/Switch semantics; capacity_factor controls it).
+
+The argsort/gather/scatter formulation avoids the O(T·E·C) one-hot dispatch
+tensors of the classic Mesh-TF implementation — at 1M-token batches those
+are unmaterialisable — and lets XLA SPMD turn the resharding into
+all-to-all-style collectives on the EP axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import EMBED, EXPERT, FFN, LAYER, NONE, ParamBuilder
+
+
+def moe_params(b: ParamBuilder, cfg: ArchConfig, prefix: str, layers: int):
+    D, F, E, L = cfg.d_model, cfg.d_ff, cfg.n_experts, layers
+    # router is tiny (D×E) and every EP rank needs all logits -> replicated
+    b.add(f"{prefix}router", (L, D, E), (LAYER, EMBED, NONE))
+    b.add(f"{prefix}w_gate", (L, E, D, F), (LAYER, EXPERT, EMBED, FFN))
+    b.add(f"{prefix}w_up", (L, E, D, F), (LAYER, EXPERT, EMBED, FFN))
+    b.add(f"{prefix}w_down", (L, E, F, D), (LAYER, EXPERT, FFN, EMBED))
+
+
+def capacity(tokens: int, cfg: ArchConfig) -> int:
+    c = int(tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(128, -(-c // 128) * 128)  # round up to lane multiple
+
+
+def moe_apply(p: dict, cfg: ArchConfig, x: jax.Array):
+    """x: [B, S, D] -> (y, aux_loss).  Router in f32 for stability.
+
+    When a production mesh is registered (distributed/context.py) the EP
+    shard_map path runs instead: under TP the activations are replicated
+    across "model", so every expert shard dispatches *locally* and one psum
+    combines — no cross-shard scatter.  The portable XLA-global path below
+    is what single-device tests and tiny smoke configs use; at scale XLA
+    lowers its cross-sharding scatter to replicated-buffer all-reduces
+    (measured 18.6 TB/device/step on moonshot train_4k — §Perf iteration M1).
+    """
+    from repro.distributed import context as CTX
+    mesh = CTX.current_mesh()
+    if mesh is not None and "model" in mesh.axis_names \
+            and cfg.n_experts % mesh.shape["model"] == 0:
+        return _moe_apply_ep(p, cfg, x, mesh)
+    return _moe_apply_global(p, cfg, x)
+
+
+def _moe_apply_ep(p: dict, cfg: ArchConfig, x: jax.Array, mesh):
+    """Expert-parallel dispatch via shard_map (DESIGN.md §3).
+
+    Device (d, m): holds tokens of data-shard d (replicated over model) and
+    the experts of group m.  Local top-k selects which of *my* experts each
+    local token hits; tokens routed to other groups contribute zero here and
+    are produced by the owning group — the final psum("model") merges.
+    Per-(shard, expert) capacity = global capacity / data-shards.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.context import dp_axes
+
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    dp = dp_axes(mesh)
+    n_data = 1
+    for a in dp:
+        n_data *= mesh.shape[a]
+    C_loc = max(8, capacity(T, cfg) // n_data)
+
+    def block(xf, router, w_gate, w_up, w_down):
+        # xf [T_l, D]; router [D, E] replicated; w_* [E_l, D, F]
+        T_l = xf.shape[0]
+        E_l = w_gate.shape[0]
+        m_idx = jax.lax.axis_index("model")
+        logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                            router.astype(jnp.float32))
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_i = jax.lax.top_k(probs, k)
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+        # aux (computed once per model rank; psum-mean below)
+        disp = jnp.sum(jax.nn.one_hot(top_i[:, 0], E, dtype=jnp.float32), 0) / T_l
+        aux = E * jnp.sum(disp * jnp.mean(probs, axis=0))
+
+        # keep only assignments that land in MY expert group
+        lo = m_idx * E_l
+        e_flat = top_i.reshape(-1)
+        mine = (e_flat >= lo) & (e_flat < lo + E_l)
+        e_loc = jnp.where(mine, e_flat - lo, E_l)          # E_l = drop bucket
+        w_flat = jnp.where(mine, top_p.reshape(-1), 0.0)
+        order = jnp.argsort(e_loc)
+        e_sorted = e_loc[order]
+        tok_sorted = (order // k).astype(jnp.int32)
+        first = jnp.searchsorted(e_sorted, e_sorted, side="left")
+        slot = (jnp.arange(T_l * k, dtype=jnp.int32) - first)
+        keep = (slot < C_loc) & (e_sorted < E_l)
+        dest = jnp.where(keep, e_sorted * C_loc + slot, E_l * C_loc)
+
+        buf = jnp.zeros((E_l * C_loc, D), x.dtype).at[dest].set(
+            xf[tok_sorted], mode="drop").reshape(E_l, C_loc, D)
+        g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+        u = jnp.einsum("ecd,edf->ecf", buf, w_up)
+        h = jax.nn.silu(g) * u
+        out = jnp.einsum("ecf,efd->ecd", h, w_down).reshape(E_l * C_loc, D)
+
+        back = out[jnp.minimum(dest, E_l * C_loc - 1)] * keep[:, None]
+        contrib = back * w_flat[order][:, None].astype(x.dtype)
+        y = jnp.zeros((T_l, D), x.dtype).at[tok_sorted].add(contrib)
+        y = jax.lax.psum(y, "model")            # merge expert groups
+        aux = jax.lax.pmean(aux, tuple(dp))     # identical across model ranks
+        return y, aux
+
+    xf = x.reshape(T, D)
+    tok_spec = P(dp, None)
+    y, aux = jax.shard_map(
+        block, mesh=mesh,
+        in_specs=(tok_spec, P(None, None), P("model", None, None),
+                  P("model", None, None), P("model", None, None)),
+        out_specs=(tok_spec, P()),
+    )(xf, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    return y.reshape(B, S, D), aux
+
+
+def _moe_apply_global(p: dict, cfg: ArchConfig, x: jax.Array):
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    xf = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                    # [T, k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # load-balancing aux (Switch): E * Σ_e f_e · p_e
+    dispatch_frac = jnp.sum(jax.nn.one_hot(top_i[:, 0], E, dtype=jnp.float32), axis=0) / T
+    prob_frac = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(dispatch_frac * prob_frac)
+
+    C = capacity(T, cfg)
+    e_flat = top_i.reshape(-1)                                # [T*k]
+    w_flat = top_p.reshape(-1)
+    order = jnp.argsort(e_flat)
+    e_sorted = e_flat[order]
+    tok_sorted = (order // k).astype(jnp.int32)
+    first = jnp.searchsorted(e_sorted, e_sorted, side="left")
+    slot = (jnp.arange(T * k, dtype=jnp.int32) - first).astype(jnp.int32)
+    keep = slot < C
+    dest = jnp.where(keep, e_sorted * C + slot, E * C)
+
+    buf = jnp.zeros((E * C, D), x.dtype).at[dest].set(xf[tok_sorted], mode="drop")
+    buf = buf.reshape(E, C, D)
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h = jax.nn.silu(g) * u
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(E * C, D)
+
+    back = out[jnp.minimum(dest, E * C - 1)] * keep[:, None]
+    contrib = back * w_flat[order][:, None].astype(x.dtype)
+    y = jnp.zeros((T, D), x.dtype).at[tok_sorted].add(contrib)
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,190 @@
+"""RWKV-6 "Finch" — attention-free time-mix with data-dependent per-channel
+decay (arXiv:2404.05892), TPU-adapted.
+
+WKV recurrence per head (k-dim i, v-dim j):
+    y_t[j] = Σ_i r_t[i] · (S_{t-1}[i,j] + u[i] k_t[i] v_t[j])
+    S_t    = diag(w_t) S_{t-1} + k_tᵀ v_t,   w_t = exp(-exp(w0 + lora(x_t)))
+
+Parallel form: chunked scan.  Within a chunk of length Lc the pairwise decay
+factors exp(cum[t-1]-cum[s]) (s < t) are all ≤ 1 (log-decay is negative and
+cumulative sums decrease), so the [t, s, i] tensor is numerically safe in
+f32 without renormalisation — the standard GLA/RWKV chunking trick.  The
+chunk loop is a ``lax.scan`` carrying the [B, H, hd, hd] state, giving O(T)
+work and an HLO whose size is independent of sequence length (critical for
+the 500k-token cell).
+
+Decode: single-step state update (the long_500k serve path).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import (EMBED, FFN, HEADS, LAYER, NONE, VOCAB,
+                                 ParamBuilder, rms_norm)
+
+LORA_R = 64
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32):
+    b = ParamBuilder(key, dtype)
+    D, F, V, L = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.n_layers
+    H, hd = cfg.n_heads, cfg.hd
+    assert H * hd == D, "rwkv6 uses d_model = heads * head_dim"
+    b.add("embed", (V, D), (VOCAB, EMBED), scale=0.02)
+    for nm in ("mu_r", "mu_k", "mu_v", "mu_g", "mu_w"):
+        b.add(f"tm/{nm}", (L, D), (LAYER, EMBED), zeros=True)
+    for nm in ("wr", "wk", "wv", "wg"):
+        b.add(f"tm/{nm}", (L, D, D), (LAYER, EMBED, HEADS))
+    b.add("tm/wo", (L, D, D), (LAYER, HEADS, EMBED))
+    b.add("tm/w0", (L, D), (LAYER, EMBED), zeros=True)
+    b.add("tm/wa", (L, D, LORA_R), (LAYER, EMBED, NONE))
+    b.add("tm/wb", (L, LORA_R, D), (LAYER, NONE, EMBED))
+    b.add("tm/u", (L, H, hd), (LAYER, HEADS, NONE), zeros=True)
+    b.add("tm/ln_out", (L, D), (LAYER, EMBED), ones=True)
+    b.add("cm/mu", (L, D), (LAYER, EMBED), zeros=True)
+    b.add("cm/mu_r", (L, D), (LAYER, EMBED), zeros=True)
+    b.add("cm/w_in", (L, D, F), (LAYER, EMBED, FFN))
+    b.add("cm/w_out", (L, F, D), (LAYER, FFN, EMBED))
+    b.add("cm/w_r", (L, D, D), (LAYER, EMBED, HEADS))
+    b.add("ln1", (L, D), (LAYER, EMBED), ones=True)
+    b.add("ln2", (L, D), (LAYER, EMBED), ones=True)
+    b.add("final_norm", (D,), (EMBED,), ones=True)
+    b.add("lm_head", (D, V), (EMBED, VOCAB), scale=0.02)
+    return b.params, b.specs
+
+
+def _shift(x, prev):
+    """Token shift: x_{t-1} with ``prev`` filling t=0.  x: [B,T,D]."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _wkv_chunked(r, k, v, logw, u, s0, chunk: int):
+    """r,k,v: [B,T,H,hd]; logw: [B,T,H,hd] (≤0); u: [H,hd];
+    s0: [B,H,hd,hd]. Returns (y [B,T,H,hd], sT)."""
+    B, T, Hh, hd = r.shape
+    pad = (-T) % chunk
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Tp = r.shape[1]
+    nc = Tp // chunk
+    resh = lambda a: a.reshape(B, nc, chunk, Hh, hd).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(logw)  # [nc,B,H,Lc,hd]
+
+    @jax.checkpoint
+    def body(s, xs):
+        # remat: without it the scan VJP stacks every intra-chunk tensor
+        # ([nc, B, H, Lc, hd] residuals) — measured as the dominant HBM term
+        # on the train_4k cells (EXPERIMENTS.md §Perf iteration H2)
+        rr, kk, vv, lw = xs                                  # [B,H,Lc,hd]
+        cum = jnp.cumsum(lw, axis=2)                         # inclusive
+        ce = cum - lw                                        # exclusive
+        # inter-chunk: y_inter[t] = (r_t ⊙ exp(ce_t)) @ S_0
+        rdec = rr * jnp.exp(ce)
+        y = jnp.einsum("bhti,bhij->bhtj", rdec, s)
+        # intra-chunk: A[t,s,i] = exp(ce[t,i] - cum[s,i]) for s<t
+        diff = ce[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,H,t,s,i]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)[None, None, :, :, None]
+        A = jnp.where(tri, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+        M = jnp.einsum("bhti,bhtsi,bhsi->bhts", rr, A, kk)
+        y = y + jnp.einsum("bhts,bhsj->bhtj", M, vv)
+        # current-token bonus
+        y = y + jnp.einsum("bhti,hi,bhti,bhtj->bhtj", rr, u, kk, vv)
+        # state to chunk end
+        dec_end = jnp.exp(cum[:, :, -1:, :] - cum)           # [B,H,Lc,hd]
+        s = s * jnp.exp(cum[:, :, -1, :])[..., None] + jnp.einsum(
+            "bhti,bhtj->bhij", kk * dec_end, vv)
+        return s, y
+
+    sT, ys = jax.lax.scan(body, s0, (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, Tp, Hh, hd)
+    return y[:, :T], sT
+
+
+def _wkv_step(r, k, v, logw, u, s):
+    """Single decode step. r,k,v,logw: [B,H,hd]; s: [B,H,hd,hd]."""
+    y = jnp.einsum("bhi,bhij->bhj", r, s) + jnp.einsum(
+        "bhi,hi,bhi,bhj->bhj", r, u, k, v)
+    s = s * jnp.exp(logw)[..., None] + jnp.einsum("bhi,bhj->bhij", k, v)
+    return y, s
+
+
+def _time_mix(cfg, lp, x, prev_tok, s0, *, chunk):
+    B, T, D = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    xs = _shift(x, prev_tok)
+    mix = lambda mu: x + (xs - x) * mu
+    xf32 = lambda a: a.astype(jnp.float32)
+    r = (mix(lp["mu_r"]) @ lp["wr"]).reshape(B, T, H, hd)
+    k = (mix(lp["mu_k"]) @ lp["wk"]).reshape(B, T, H, hd)
+    v = (mix(lp["mu_v"]) @ lp["wv"]).reshape(B, T, H, hd)
+    g = jax.nn.silu(mix(lp["mu_g"]) @ lp["wg"])
+    lw = lp["w0"] + jnp.tanh(mix(lp["mu_w"]) @ lp["wa"]) @ lp["wb"]
+    logw = -jnp.exp(jnp.clip(xf32(lw), -8.0, 4.0)).reshape(B, T, H, hd)
+    if T == 1:  # decode fast path: plain state update, no chunk machinery
+        y, sT = _wkv_step(xf32(r[:, 0]), xf32(k[:, 0]), xf32(v[:, 0]),
+                          logw[:, 0], xf32(lp["u"]), s0)
+        y = y[:, None]
+    else:
+        y, sT = _wkv_chunked(xf32(r), xf32(k), xf32(v), logw,
+                             xf32(lp["u"]), s0, chunk)
+    y = y.astype(x.dtype).reshape(B, T, D)
+    y = rms_norm(y, lp["ln_out"], cfg.norm_eps) * g
+    return y @ lp["wo"], x[:, -1, :], sT
+
+
+def _channel_mix(cfg, lp, x, prev_tok):
+    xs = _shift(x, prev_tok)
+    xk = x + (xs - x) * lp["mu"]
+    xr = x + (xs - x) * lp["mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ lp["w_in"]))
+    return jax.nn.sigmoid(xr @ lp["w_r"]) * (kk @ lp["w_out"]), x[:, -1, :]
+
+
+def make_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    L, H, hd, D = cfg.n_layers, cfg.n_heads, cfg.hd, cfg.d_model
+    return dict(
+        s=jnp.zeros((L, batch, H, hd, hd), jnp.float32),
+        tm_prev=jnp.zeros((L, batch, D), dtype),
+        cm_prev=jnp.zeros((L, batch, D), dtype),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "chunk", "remat"))
+def forward(cfg: ArchConfig, params: dict, tokens, *, state=None,
+            chunk: int = 256, remat: bool = True, positions=None,
+            image_embeds=None, audio_feats=None, cache=None, cache_pos=None):
+    """Returns (logits, new_state, aux=0). ``state`` enables continuation
+    (decode uses T=1)."""
+    x = params["embed"][tokens]
+    B, T, D = x.shape
+    if state is None:
+        state = make_state(cfg, B, x.dtype)
+
+    tm = {k.removeprefix("tm/"): v for k, v in params.items() if k.startswith("tm/")}
+    cm = {k.removeprefix("cm/"): v for k, v in params.items() if k.startswith("cm/")}
+    stacks = dict(tm=tm, cm=cm, ln1=params["ln1"], ln2=params["ln2"])
+
+    def layer_body(x, xs):
+        lp, s_l, tm_prev, cm_prev = xs
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        att, tm_last, sT = _time_mix(cfg, lp["tm"], h, tm_prev, s_l, chunk=chunk)
+        x = x + att
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        ff, cm_last = _channel_mix(cfg, lp["cm"], h, cm_prev)
+        x = x + ff
+        return x, (sT, tm_last, cm_last)
+
+    body = jax.checkpoint(layer_body) if remat else layer_body
+    x, (s_new, tm_new, cm_new) = jax.lax.scan(
+        body, x, (stacks, state["s"], state["tm_prev"], state["cm_prev"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    new_state = dict(s=s_new, tm_prev=tm_new, cm_prev=cm_new)
+    return logits, new_state, jnp.float32(0.0)

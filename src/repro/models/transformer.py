@@ -1,0 +1,200 @@
+"""Decoder/encoder transformer covering the dense, MoE, VLM and audio
+families.  Layers are stacked ([L, ...] params) and executed with
+``jax.lax.scan`` + activation remat so the HLO stays compact for 64-100
+layer configs and the dry-run compiles quickly.
+
+VLM (llama-3.2-vision style): layers are organised in groups of
+``cross_attn_every`` self layers followed by one cross-attention layer
+reading projected image-patch embeddings; scan over groups with an inner
+scan over the group's self layers.
+
+Caches: self-attn KV per layer stacked [L, B, K, S_max, hd]; cross-attn KV
+is computed once at prefill.  ``positions`` are absolute token positions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as LYR
+from repro.models import moe as MOE
+from repro.models.layers import (EMBED, HEADS, KV, LAYER, NONE, VOCAB,
+                                 ParamBuilder, attention, attention_params,
+                                 mlp, mlp_params, rms_norm, take_layer)
+
+
+def n_groups(cfg: ArchConfig) -> int:
+    if cfg.cross_attn_every:
+        return cfg.n_layers // (cfg.cross_attn_every + 1)
+    return 0
+
+
+def n_self_layers(cfg: ArchConfig) -> int:
+    g = n_groups(cfg)
+    return cfg.n_layers - g if g else cfg.n_layers
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32):
+    b = ParamBuilder(key, dtype)
+    D, V = cfg.d_model, cfg.vocab
+    Ls = n_self_layers(cfg)
+    b.add("embed", (V, D), (VOCAB, EMBED), scale=0.02)
+    attention_params(b, cfg, "self/", Ls)
+    if cfg.n_experts:
+        MOE.moe_params(b, cfg, "self/", Ls)
+    else:
+        mlp_params(b, cfg, "self/", Ls)
+    b.add("self/ln1", (Ls, D), (LAYER, EMBED), ones=True)
+    b.add("self/ln2", (Ls, D), (LAYER, EMBED), ones=True)
+    g = n_groups(cfg)
+    if g:
+        attention_params(b, cfg, "cross/", g)
+        mlp_params(b, cfg, "cross/", g)
+        b.add("cross/ln1", (g, D), (LAYER, EMBED), ones=True)
+        b.add("cross/ln2", (g, D), (LAYER, EMBED), ones=True)
+        b.add("cross/gate", (g,), (LAYER,), zeros=True)
+        b.add("vision_proj", (cfg.vision_embed_dim, D), (NONE, EMBED))
+    if cfg.audio_feat_dim:
+        b.add("audio_proj", (cfg.audio_feat_dim, D), (NONE, EMBED))
+    b.add("final_norm", (D,), (EMBED,), ones=True)
+    if not cfg.tie_embeddings:
+        b.add("lm_head", (D, V), (EMBED, VOCAB), scale=0.02)
+    return b.params, b.specs
+
+
+def _self_block(cfg: ArchConfig, lp: dict, x, positions, cache, cache_pos, layer_window):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    attn_out, new_cache = attention(
+        lp, cfg, h, positions,
+        cache=cache, cache_pos=cache_pos,
+        causal=not cfg.encoder_only,
+        window=layer_window,
+    )
+    x = x + attn_out
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        ff, aux = MOE.moe_apply(lp, cfg, h)
+    else:
+        ff, aux = mlp(lp, h), jnp.float32(0.0)
+    return x + ff, new_cache, aux
+
+
+def _window_for_layer(cfg: ArchConfig, i):
+    """Hybrid archs: sliding window except every k-th (global) layer."""
+    if cfg.sliding_window is None:
+        return None
+    if cfg.global_layer_every:
+        # traced layer index: window as dynamic value (None only when static)
+        is_global = (i % cfg.global_layer_every) == 0
+        return jnp.where(is_global, jnp.int32(1 << 30), jnp.int32(cfg.sliding_window))
+    return cfg.sliding_window
+
+
+def make_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    Ls = n_self_layers(cfg)
+    K, hd = cfg.n_kv_heads, cfg.hd
+    shape = (Ls, batch, K, max_seq, hd)
+    return dict(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def _remat_wrap(body, remat):
+    """remat=True: full recompute; remat="dots": save matmul outputs and
+    recompute only elementwise chains (≈-25% HBM traffic for one extra
+    microbatch-lifetime of saved dots — §Perf iteration M2); False: none."""
+    if remat == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(body) if remat else body
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "remat"))
+def forward(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jax.Array,                     # int32[B, S]
+    *,
+    positions: Optional[jax.Array] = None, # int32[S]
+    image_embeds: Optional[jax.Array] = None,  # [B, N_img, vision_embed_dim]
+    audio_feats: Optional[jax.Array] = None,   # [B, S, feat]
+    cache: Optional[dict] = None,          # stacked KV cache
+    cache_pos: Optional[jax.Array] = None,
+    remat: bool = True,
+):
+    """Returns (logits [B,S,V], new_cache, aux_loss)."""
+    if audio_feats is not None:
+        x = audio_feats.astype(params["embed"].dtype) @ params["audio_proj"]
+    else:
+        x = params["embed"][tokens]
+    B, S, D = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+
+    Ls = n_self_layers(cfg)
+    g = n_groups(cfg)
+    img = None
+    if g and image_embeds is not None:
+        img = image_embeds.astype(x.dtype) @ params["vision_proj"]
+
+    self_params = {k.removeprefix("self/"): v for k, v in params.items()
+                   if k.startswith("self/")}
+
+    def layer_body(carry, inputs):
+        x = carry
+        lp, idx, cache_l = inputs
+        win = _window_for_layer(cfg, idx)
+        x, new_cache_l, aux = _self_block(
+            cfg, lp, x, positions, cache_l, cache_pos, win)
+        return x, (new_cache_l, aux)
+
+    body = _remat_wrap(layer_body, remat)
+
+    def run_stack(x, stack_params, stack_cache, idx0):
+        nl = jax.tree_util.tree_leaves(stack_params)[0].shape[0]
+        idxs = idx0 + jnp.arange(nl)
+        x, (new_cache, aux) = jax.lax.scan(
+            body, x, (stack_params, idxs, stack_cache))
+        return x, new_cache, jnp.sum(aux)
+
+    if not g:
+        x, new_cache, aux = run_stack(x, self_params, cache, 0)
+    else:
+        # groups: cross_attn_every self layers + 1 cross layer
+        k_in = cfg.cross_attn_every
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape((g, k_in) + a.shape[1:]), self_params)
+        cross_params = {k.removeprefix("cross/"): v for k, v in params.items()
+                        if k.startswith("cross/")}
+        cache_g = (jax.tree_util.tree_map(
+            lambda a: a.reshape((g, k_in) + a.shape[1:]), cache)
+            if cache is not None else None)
+
+        def group_body(carry, inputs):
+            x = carry
+            gp, cp, gidx, gcache = inputs
+            x, new_gcache, aux = run_stack(x, gp, gcache, gidx * k_in)
+            # cross-attention layer (full attn over image tokens, gated)
+            h = rms_norm(x, cp["ln1"], cfg.norm_eps)
+            ca, _ = attention(cp, cfg, h, positions, kv_x=img, causal=False,
+                              use_rope=False)
+            x = x + jnp.tanh(cp["gate"]) * ca
+            h = rms_norm(x, cp["ln2"], cfg.norm_eps)
+            x = x + mlp(cp, h)
+            return x, (new_gcache, aux)
+
+        gbody = _remat_wrap(group_body, remat)
+        x, (new_cache_g, aux_g) = jax.lax.scan(
+            gbody, x, (grouped, cross_params, jnp.arange(g), cache_g))
+        new_cache = (jax.tree_util.tree_map(
+            lambda a: a.reshape((g * k_in,) + a.shape[2:]), new_cache_g)
+            if cache is not None else None)
+        aux = jnp.sum(aux_g)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return logits, new_cache, aux

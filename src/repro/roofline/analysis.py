@@ -1,0 +1,209 @@
+"""Three-term roofline from a compiled dry-run artifact (no hardware).
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+``cost_analysis`` supplies FLOPs/bytes (whole-program, i.e. already the
+global work; divide by chips).  Collective bytes are *not* in
+cost_analysis: we parse the optimised HLO, sum the result sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+and multiply ops inside ``while`` loops by the loop trip count (scan-over-
+layers puts FSDP all-gathers inside the loop body — missing the ×L would
+understate the term by two orders of magnitude).  Trip counts are recovered
+from the loop-condition constant; see ``_trip_count``.
+
+Hardware constants: TPU v5e-class — 197 bf16 TFLOP/s, 819 GB/s HBM,
+~50 GB/s/link ICI (assignment §ROOFLINE).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    total_bytes: int
+    op_counts: dict
+
+
+def _split_computations(hlo: str) -> dict:
+    """computation name -> body text."""
+    comps = {}
+    cur_name, cur_lines = None, []
+    for line in hlo.splitlines():
+        m = re.match(r"\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$", line)
+        m2 = re.match(r"\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(", line) if not m else None
+        if (m or m2) and line.rstrip().endswith("{"):
+            if cur_name is not None:
+                comps[cur_name] = "\n".join(cur_lines)
+            cur_name = (m or m2).group(1)
+            cur_lines = []
+        elif line.strip() == "}":
+            if cur_name is not None:
+                comps[cur_name] = "\n".join(cur_lines)
+                cur_name = None
+                cur_lines = []
+        elif cur_name is not None:
+            cur_lines.append(line)
+    if cur_name is not None:
+        comps[cur_name] = "\n".join(cur_lines)
+    return comps
+
+
+def _trip_count(cond_body: str) -> int:
+    """Heuristic: scan conditions compare the induction var to a constant."""
+    consts = [int(x) for x in re.findall(r"constant\((\d+)\)", cond_body)]
+    return max(consts) if consts else 1
+
+
+def collective_bytes(hlo: str) -> CollectiveStats:
+    comps = _split_computations(hlo)
+
+    # per-computation direct collective bytes
+    direct = {name: {} for name in comps}
+    counts: dict = {}
+    for name, body in comps.items():
+        for line in body.splitlines():
+            stripped = line.split("=", 1)
+            if len(stripped) != 2:
+                continue
+            lhs, rhs = stripped
+            opm = re.match(r"\s*%?[\w\.\-]*\s*", rhs)
+            for kind in _COLLECTIVES:
+                if re.match(rf"\s*{kind}[\.\s(]", rhs) or rhs.lstrip().startswith(kind):
+                    b = _shape_bytes(lhs)
+                    direct[name][kind] = direct[name].get(kind, 0) + b
+                    counts[kind] = counts.get(kind, 0) + 1
+                    break
+
+    # calls: while loops multiply by trip count; other calls add once
+    call_re = re.compile(
+        r"(while|call|fusion|conditional)\(.*?\).*?"
+        r"(?:body|to_apply|true_computation)=%?([\w\.\-]+)", )
+    cond_re = re.compile(r"condition=%?([\w\.\-]+)")
+
+    import functools
+
+    @functools.lru_cache(maxsize=None)
+    def total_of(name: str) -> dict:
+        body = comps.get(name, "")
+        acc = dict(direct.get(name, {}))
+        for line in body.splitlines():
+            m = call_re.search(line)
+            if not m:
+                continue
+            op, callee = m.groups()
+            sub = total_of(callee)
+            mult = 1
+            if op == "while":
+                mc = cond_re.search(line)
+                if mc:
+                    mult = _trip_count(comps.get(mc.group(1), ""))
+            for k, v in sub.items():
+                acc[k] = acc.get(k, 0) + v * mult
+        return acc
+
+    entry = None
+    for cand in ("main", "main.0"):
+        if cand in comps:
+            entry = cand
+    if entry is None:  # fall back: the computation named like ENTRY
+        m = re.search(r"ENTRY\s+%?([\w\.\-]+)", hlo)
+        entry = m.group(1) if m else max(comps, key=lambda n: len(comps[n]))
+    by_kind = total_of(entry)
+    return CollectiveStats(
+        bytes_by_kind=by_kind,
+        total_bytes=sum(by_kind.values()),
+        op_counts=counts,
+    )
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_hbm: float
+    bytes_collective: float
+    model_flops: float
+    useful_ratio: float
+    chips: int = 256
+
+    @property
+    def dominant(self) -> str:
+        terms = dict(compute=self.compute_s, memory=self.memory_s,
+                     collective=self.collective_s)
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower-bound step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful model FLOPs vs what the chips could do in step_time."""
+        if self.step_time_s == 0:
+            return 0.0
+        return self.model_flops / (self.step_time_s * PEAK_FLOPS * self.chips)
+
+
+def roofline_from_hlo(hc, *, chips: int, model_flops: float) -> Roofline:
+    """``hc``: HloCost from hlo_parse.parse_hlo — *per-device* values (the
+    post-SPMD HLO carries local shapes), so the terms divide by per-chip
+    rates directly; ``model_flops`` stays global and is normalised by
+    ``chips`` in useful_ratio / roofline_fraction."""
+    flops = float(hc.flops)
+    byts = float(hc.bytes)
+    coll = float(hc.total_collective)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = coll / LINK_BW
+    useful = model_flops / (flops * chips) if flops else 0.0
+    return Roofline(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        flops=flops,
+        bytes_hbm=byts,
+        bytes_collective=coll,
+        model_flops=model_flops,
+        useful_ratio=useful,
+        chips=chips,
+    )

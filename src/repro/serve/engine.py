@@ -1,0 +1,102 @@
+"""Batched serving engine with an ESCHER-style cache-slot pool.
+
+The KV cache is a fixed pool of per-sequence slots (capacity = max
+concurrent sequences).  Finished sequences *free* their slot; new requests
+*reuse* freed slots without reallocation — the same preallocate/mark-free/
+reuse discipline as the paper's block manager (DESIGN.md §4), applied to
+serving memory.  Continuous batching: each engine step decodes every active
+slot; arrivals fill free slots at step boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import api
+from repro.serve import serve_step as SRV
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # int32[prompt_len]
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params, *, slots: int, max_seq: int,
+                 dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.cache = api.init_decode_state(cfg, slots, max_seq, dtype)
+        self.free = deque(range(slots))            # ESCHER-style slot pool
+        self.active: dict[int, Request] = {}       # slot -> request
+        self.pos = np.zeros(slots, np.int32)
+        self.queue: deque[Request] = deque()
+        self.decode = jax.jit(SRV.make_decode(cfg))
+        self._prefill_cache = {}
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _prefill_one(self, slot: int, req: Request) -> None:
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        plen = tokens.shape[1]
+        prefill = self._prefill_cache.get(plen)
+        if prefill is None:
+            prefill = jax.jit(SRV.make_prefill(self.cfg, self.max_seq))
+            self._prefill_cache[plen] = prefill
+        one_cache = jax.tree_util.tree_map(
+            lambda a: a[:, slot:slot + 1] if a.ndim > 1 else a, self.cache)
+        logits, one_cache = prefill(self.params, tokens, one_cache)
+        self.cache = jax.tree_util.tree_map(
+            lambda full, one: jax.lax.dynamic_update_slice_in_dim(full, one, slot, axis=1),
+            self.cache, one_cache)
+        nxt = int(jnp.argmax(logits[-1] if logits.ndim == 1 else logits[0]))
+        req.out.append(nxt)
+        self.pos[slot] = plen
+
+    def step(self) -> list[Request]:
+        """Admit → decode one token for all active slots → retire."""
+        while self.queue and self.free:
+            slot = self.free.popleft()        # reuse freed slot (no realloc)
+            req = self.queue.popleft()
+            self.active[slot] = req
+            self._prefill_one(slot, req)
+
+        finished = []
+        if self.active:
+            toks = np.zeros((self.slots, 1), np.int32)
+            for slot, req in self.active.items():
+                toks[slot, 0] = req.out[-1]
+            # single batched decode across the whole pool (idle slots waste
+            # one token of compute — the continuous-batching trade)
+            pos = jnp.asarray(int(max(self.pos[s] for s in self.active)), jnp.int32)
+            logits, self.cache = self.decode(
+                self.params, jnp.asarray(toks), self.cache, pos)
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            for slot, req in list(self.active.items()):
+                req.out.append(int(nxt[slot]))
+                self.pos[slot] += 1
+                if len(req.out) >= req.max_new + 1 or self.pos[slot] >= self.max_seq - 1:
+                    req.done = True
+                    finished.append(req)
+                    del self.active[slot]
+                    self.free.append(slot)     # slot back in the pool
+        return finished
+
+    def run(self) -> list[Request]:
+        done = []
+        while self.queue or self.active:
+            done += self.step()
+        return done

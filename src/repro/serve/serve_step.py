@@ -1,0 +1,46 @@
+"""Serving steps: prefill (context → cache + first logits) and decode
+(one token against the cache).  ``decode_*`` / ``long_*`` dry-run cells
+lower ``decode_step`` — one new token with a seq_len-deep cache.
+
+The KV cache pool follows ESCHER's block-reuse idea (DESIGN.md §4): the
+engine (serve/engine.py) manages fixed-capacity per-sequence cache slots and
+reuses freed slots on eviction instead of reallocating."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import api
+
+
+def make_prefill(cfg: ArchConfig, max_seq: int):
+    def prefill(params, tokens, cache, **kw):
+        """tokens [B,S]; cache pre-allocated for max_seq."""
+        logits, new_cache, _ = api.forward(
+            cfg, params, tokens, cache=cache, cache_pos=jnp.int32(0),
+            remat=False, **kw)
+        return logits[:, -1], new_cache
+
+    if cfg.family in ("ssm",):
+        def prefill(params, tokens, cache, **kw):  # noqa: F811 — state models
+            logits, state, _ = api.forward(cfg, params, tokens, cache=cache, **kw)
+            return logits[:, -1], state
+    return prefill
+
+
+def make_decode(cfg: ArchConfig):
+    def decode(params, token, cache, pos, **kw):
+        """token [B,1]; pos scalar int32 — absolute position of this token."""
+        logits, new_cache, _ = api.forward(
+            cfg, params, token, cache=cache, cache_pos=pos,
+            positions=pos + jnp.arange(1), remat=False, **kw)
+        return logits[:, -1], new_cache
+
+    if cfg.family in ("ssm",):
+        def decode(params, token, cache, pos, **kw):  # noqa: F811
+            logits, state, _ = api.forward(cfg, params, token, cache=cache, **kw)
+            return logits[:, -1], state
+    return decode

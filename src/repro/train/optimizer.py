@@ -1,0 +1,85 @@
+"""AdamW + global-norm clipping + WSD/cosine schedule — pure JAX pytrees.
+
+Optimizer state mirrors the param tree (m, v in f32 regardless of param
+dtype — mixed-precision master moments), so the same sharding specs apply
+leaf-for-leaf and FSDP shards the moments too.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(c: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(c.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - c.warmup_steps) / jnp.maximum(c.total_steps - c.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = c.min_lr_frac + (1 - c.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return c.lr * warm * cos
+
+
+def init_state(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return dict(
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def _decay_mask(path: str) -> bool:
+    """No weight decay on norms / biases / scalars."""
+    needle = path.lower()
+    return not any(t in needle for t in ("norm", "ln", "bias", "gate", "mu", "w0", "u"))
+
+
+def apply_updates(c: AdamWConfig, params: dict, opt: dict, grads: dict):
+    """One AdamW step. Returns (params', opt', metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, c.clip_norm / (gnorm + 1e-6))
+    step = opt["step"] + 1
+    lr = schedule(c, step)
+    b1, b2 = c.beta1, c.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k].astype(jnp.float32) * scale
+        m = b1 * opt["m"][k] + (1 - b1) * g
+        v = b2 * opt["v"][k] + (1 - b2) * jnp.square(g)
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + c.eps)
+        if _decay_mask(k):
+            upd = upd + c.weight_decay * params[k].astype(jnp.float32)
+        new_p[k] = (params[k].astype(jnp.float32) - lr * upd).astype(params[k].dtype)
+        new_m[k] = m
+        new_v[k] = v
+    metrics = dict(grad_norm=gnorm, lr=lr)
+    return new_p, dict(m=new_m, v=new_v, step=step), metrics

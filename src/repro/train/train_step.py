@@ -1,0 +1,117 @@
+"""Training step factory: loss, grad accumulation (microbatches), AdamW,
+optional int8 gradient compression with error feedback.
+
+The returned ``train_step(state, batch)`` is a pure function suitable for
+``jax.jit`` with donated state; the microbatch loop is a ``lax.scan`` so the
+HLO stays compact and XLA overlaps the per-microbatch gradient all-reduce
+with the next microbatch's backward pass (latency hiding).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import api
+from repro.train import optimizer as OPT
+from repro.distributed import compression as COMP
+
+
+def cross_entropy(logits, labels, mask=None):
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = logz - gold
+    if mask is not None:
+        return jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(ce)
+
+
+def make_loss_fn(cfg: ArchConfig, *, remat=True):
+    def loss_fn(params, batch):
+        kw = {}
+        if cfg.family == "vlm":
+            kw["image_embeds"] = batch["image_embeds"]
+        if cfg.family == "audio":
+            kw["audio_feats"] = batch["audio_feats"]
+        logits, _, aux = api.forward(cfg, params, batch["tokens"], remat=remat, **kw) \
+            if cfg.family not in ("ssm",) else api.forward(cfg, params, batch["tokens"], **kw)
+        ce = cross_entropy(logits, batch["labels"])
+        return ce + 0.01 * aux, dict(ce=ce, aux=aux)
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opt_cfg: OPT.AdamWConfig,
+    *,
+    microbatches: int = 1,
+    compress_grads: bool = False,
+    remat=True,
+):
+    loss_fn = make_loss_fn(cfg, remat=remat)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        params, opt = state["params"], state["opt"]
+        if microbatches > 1:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+            mb = jax.tree_util.tree_map(split, batch)
+
+            def body(acc, one):
+                (loss, aux), g = grad_fn(params, one)
+                acc = jax.tree_util.tree_map(jnp.add, acc, g)
+                return acc, (loss, aux["ce"])
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, ces) = jax.lax.scan(body, zeros, mb)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            loss, ce = jnp.mean(losses), jnp.mean(ces)
+        else:
+            (loss, aux), grads = grad_fn(params, batch)
+            ce = aux["ce"]
+
+        ef = state.get("ef")
+        if compress_grads:
+            grads, ef = COMP.compress_decompress(grads, ef)
+
+        new_params, new_opt, om = OPT.apply_updates(opt_cfg, params, opt, grads)
+        new_state = dict(params=new_params, opt=new_opt, step=state["step"] + 1)
+        if compress_grads:
+            new_state["ef"] = ef
+        metrics = dict(loss=loss, ce=ce, **om)
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ArchConfig, key, dtype=jnp.float32, *, compress_grads=False):
+    params, specs = api.init_params(cfg, key, dtype)
+    state = dict(params=params, opt=OPT.init_state(params), step=jnp.zeros((), jnp.int32))
+    if compress_grads:
+        state["ef"] = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state, specs
+
+
+def state_shardings(specs, state, mode, mesh):
+    """Sharding tree matching a train state (opt moments follow params)."""
+    from repro.distributed import sharding as SH
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    p_sh = SH.param_shardings(specs, state["params"], mode, mesh)
+    rep = NamedSharding(mesh, P())
+    out = dict(
+        params=p_sh,
+        opt=dict(m=dict(p_sh), v=dict(p_sh), step=rep),
+        step=rep,
+    )
+    if "ef" in state:
+        out["ef"] = dict(p_sh)
+    return out

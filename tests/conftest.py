@@ -1,0 +1,29 @@
+import os
+import sys
+
+# tests run on the single real CPU device — the 512-device override is
+# exclusive to launch/dryrun.py (see assignment step 0)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def rand_hyperedges(rng, n, n_vertices, lo=2, hi=5):
+    out, seen = [], set()
+    tries = 0
+    while len(out) < n and tries < 50 * n:
+        tries += 1
+        k = int(rng.integers(lo, min(hi, n_vertices)))
+        e = tuple(sorted(rng.choice(n_vertices, size=k, replace=False).tolist()))
+        if e not in seen:
+            seen.add(e)
+            out.append(list(e))
+    return out

@@ -1,0 +1,69 @@
+"""Block manager invariants: Eq.1 placement, search, avail propagation,
+k-th-available descent."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import blockmgr as bm
+
+
+@pytest.mark.parametrize("max_edges", [3, 10, 31, 100])
+def test_cbt_index_is_inorder_bijection(max_edges):
+    mgr = bm.build_manager(max_edges)
+    n = mgr.n_slots
+    ranks = jnp.arange(n, dtype=jnp.int32)
+    idx = np.asarray(bm.cbt_index(ranks, mgr.height))
+    # bijection into [1, n]
+    assert sorted(idx.tolist()) == list(range(1, n + 1))
+    # BST property: in-order traversal of hid is ascending
+    assert (np.asarray(mgr.hid)[idx] == np.asarray(ranks)).all()
+
+
+def test_search_matches_closed_form():
+    mgr = bm.build_manager(40)
+    ranks = jnp.arange(mgr.n_slots, dtype=jnp.int32)
+    assert (bm.search(mgr, ranks) == bm.cbt_index(ranks, mgr.height)).all()
+
+
+def test_delete_claim_avail_cycle():
+    mgr = bm.build_manager(20)
+    live = jnp.arange(15, dtype=jnp.int32)
+    idx = bm.cbt_index(live, mgr.height)
+    mgr = dataclasses.replace(mgr, present=mgr.present.at[idx].set(1))
+
+    dels = jnp.array([3, 7, 11, 14], jnp.int32)
+    mgr = bm.mark_delete(mgr, dels, jnp.ones(4, bool))
+    assert int(mgr.root_avail) == 4
+    # double delete is a no-op
+    mgr2 = bm.mark_delete(mgr, dels[:2], jnp.ones(2, bool))
+    assert int(mgr2.root_avail) == 4
+
+    # k-th available returns the deleted ranks in ascending (in-order) order
+    ks = jnp.arange(1, 5)
+    nodes = bm.find_kth_available(mgr, ks)
+    assert np.asarray(mgr.hid)[np.asarray(nodes)].tolist() == [3, 7, 11, 14]
+
+    mgr = bm.claim_nodes(mgr, nodes[:2], jnp.ones(2, bool))
+    assert int(mgr.root_avail) == 2
+    nodes2 = bm.find_kth_available(mgr, jnp.arange(1, 3))
+    assert np.asarray(mgr.hid)[np.asarray(nodes2)].tolist() == [11, 14]
+
+
+def test_avail_counts_consistent_at_every_node():
+    rng = np.random.default_rng(3)
+    mgr = bm.build_manager(64)
+    live = jnp.arange(60, dtype=jnp.int32)
+    idx = bm.cbt_index(live, mgr.height)
+    mgr = dataclasses.replace(mgr, present=mgr.present.at[idx].set(1))
+    dels = jnp.asarray(rng.choice(60, size=17, replace=False).astype(np.int32))
+    mgr = bm.mark_delete(mgr, dels, jnp.ones(17, bool))
+
+    avail = np.asarray(mgr.avail)
+    deleted = np.asarray(mgr.deleted)
+    n = mgr.n_slots
+    for i in range(n, 0, -1):  # bottom-up check: avail = deleted + children
+        l = avail[2 * i] if 2 * i < len(avail) else 0
+        r = avail[2 * i + 1] if 2 * i + 1 < len(avail) else 0
+        assert avail[i] == deleted[i] + l + r, i

@@ -1,0 +1,110 @@
+"""Property test: ESCHER two-way hypergraph == plain Python dict-of-sets
+model under random op sequences (hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hypergraph as H
+from repro.core.store import EMPTY, read_dense
+
+NV = 12
+MAXC = 8
+BATCH = 3  # fixed shapes -> one jit trace for the whole suite
+
+
+def _pad_insert(edges):
+    nl = np.full((BATCH, MAXC), EMPTY, np.int32)
+    nc = np.zeros(BATCH, np.int32)
+    mask = np.zeros(BATCH, bool)
+    for i, e in enumerate(edges[:BATCH]):
+        nl[i, : len(e)] = sorted(e)
+        nc[i] = len(e)
+        mask[i] = True
+    return jnp.asarray(nl), jnp.asarray(nc), jnp.asarray(mask)
+
+
+def _pad_del(ranks):
+    d = np.zeros(BATCH, np.int32)
+    m = np.zeros(BATCH, bool)
+    for i, r in enumerate(ranks[:BATCH]):
+        d[i] = r
+        m[i] = True
+    return jnp.asarray(d), jnp.asarray(m)
+
+
+edge_strategy = st.lists(
+    st.integers(0, NV - 1), min_size=2, max_size=4, unique=True)
+
+op_strategy = st.one_of(
+    st.tuples(st.just("del"), st.lists(st.integers(0, 30), min_size=1, max_size=BATCH)),
+    st.tuples(st.just("ins"), st.lists(edge_strategy, min_size=1, max_size=BATCH)),
+    st.tuples(st.just("vmod"),
+              st.lists(st.tuples(st.integers(0, 30), st.integers(0, NV - 1),
+                                 st.booleans()), min_size=1, max_size=BATCH)),
+)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    init=st.lists(edge_strategy, min_size=2, max_size=6),
+    ops=st.lists(op_strategy, min_size=1, max_size=5),
+)
+def test_escher_matches_python_model(init, ops):
+    # dedupe initial edges (hypergraphs of distinct hyperedges)
+    seen, edges = set(), []
+    for e in init:
+        t = tuple(sorted(e))
+        if t not in seen:
+            seen.add(t)
+            edges.append(sorted(e))
+    hg = H.from_lists(edges, num_vertices=NV, max_edges=32, max_card=MAXC,
+                      max_vdeg=64, slack=4.0)
+    model = {i: set(e) for i, e in enumerate(edges)}
+
+    for kind, payload in ops:
+        if kind == "del":
+            live = sorted(model)
+            ranks = [live[r % len(live)] for r in payload] if live else []
+            ranks = list(dict.fromkeys(ranks))
+            if not ranks:
+                continue
+            d, m = _pad_del(ranks)
+            hg = H.delete_hyperedges(hg, d, m)
+            for r in ranks[:BATCH]:
+                model.pop(r, None)
+        elif kind == "ins":
+            nl, nc, mask = _pad_insert(payload)
+            hg, new_ranks = H.insert_hyperedges(hg, nl, nc, mask)
+            for i, e in enumerate(payload[:BATCH]):
+                model[int(new_ranks[i])] = set(e)
+        else:  # vmod
+            live = sorted(model)
+            if not live:
+                continue
+            hids, vids, ins = [], [], []
+            for h, v, is_ins in payload:
+                hids.append(live[h % len(live)])
+                vids.append(v)
+                ins.append(is_ins)
+            hh = np.zeros(BATCH, np.int32)
+            vv = np.zeros(BATCH, np.int32)
+            ii = np.zeros(BATCH, bool)
+            mm = np.zeros(BATCH, bool)
+            for i in range(min(len(hids), BATCH)):
+                hh[i], vv[i], ii[i], mm[i] = hids[i], vids[i], ins[i], True
+            hg = H.apply_vertex_updates(hg, jnp.asarray(hh), jnp.asarray(vv),
+                                        jnp.asarray(ii), jnp.asarray(mm))
+            for i in range(min(len(hids), BATCH)):
+                s = model[hids[i]]
+                if ii[i] and len(s) < MAXC:
+                    s.add(vids[i])
+                elif not ii[i]:
+                    s.discard(vids[i])
+
+        assert H.to_python(hg) == model
+        # v2h mapping consistent with h2v (two-way invariant)
+        for v in range(NV):
+            row = np.asarray(read_dense(hg.v2h, jnp.array([v])))[0]
+            got = set(row[row != EMPTY].tolist())
+            exp = {h for h, s in model.items() if v in s}
+            assert got == exp, (v, got, exp)

@@ -1,0 +1,90 @@
+"""Per-kernel shape/dtype sweeps: Pallas interpret vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import intersect as K
+from repro.kernels import ref as R
+from repro.kernels.flash_attention import flash_attention
+
+EMPTY = np.iinfo(np.int32).max
+
+
+def mksets(rng, n, c, univ):
+    out = np.full((n, c), EMPTY, np.int32)
+    for i in range(n):
+        k = int(rng.integers(0, c + 1))
+        if k:
+            out[i, :k] = np.sort(rng.choice(univ, size=k, replace=False))
+    return jnp.asarray(out)
+
+
+@pytest.mark.parametrize("n,c", [(1, 8), (7, 16), (33, 32), (5, 128), (64, 64)])
+def test_pair_intersect_sweep(n, c):
+    rng = np.random.default_rng(n * 100 + c)
+    x, y = mksets(rng, n, c, 3 * c), mksets(rng, n, c, 3 * c)
+    got = K.pair_intersect_count(x, y)
+    exp = R.pair_intersect_count(x, y)
+    assert (np.asarray(got) == np.asarray(exp)).all()
+
+
+@pytest.mark.parametrize("n,c", [(4, 8), (17, 32), (3, 128)])
+def test_membership_sweep(n, c):
+    rng = np.random.default_rng(n + c)
+    x, y = mksets(rng, n, c, 2 * c), mksets(rng, n, c, 2 * c)
+    assert (np.asarray(K.membership(x, y)) == np.asarray(R.membership(x, y))).all()
+
+
+@pytest.mark.parametrize("n,k,c", [(3, 2, 8), (9, 5, 16), (2, 11, 64)])
+def test_triple_intersect_sweep(n, k, c):
+    rng = np.random.default_rng(n * k + c)
+    a, b = mksets(rng, n, c, 2 * c), mksets(rng, n, c, 2 * c)
+    cand = jnp.stack([mksets(rng, k, c, 2 * c) for _ in range(n)])
+    got = K.triple_intersect_count(a, b, cand)
+    exp = R.triple_intersect_count(a, b, cand)
+    assert (np.asarray(got) == np.asarray(exp)).all()
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-5), (jnp.bfloat16, 3e-2)])
+@pytest.mark.parametrize(
+    "b,hq,hkv,sq,skv,d,window",
+    [
+        (2, 4, 2, 64, 64, 16, None),     # GQA causal
+        (1, 2, 2, 48, 48, 32, None),     # ragged blocks
+        (2, 4, 2, 1, 64, 16, None),      # decode
+        (1, 4, 1, 64, 64, 16, 16),       # sliding window + MQA
+    ],
+)
+def test_flash_attention_sweep(b, hq, hkv, sq, skv, d, window, dtype, atol):
+    rng = np.random.default_rng(abs(hash((b, hq, sq, skv, d, str(window)))) % 2**31)
+    t = lambda *s: jnp.asarray(rng.standard_normal(s), dtype)
+    q, k, v = t(b, hq, sq, d), t(b, hkv, skv, d), t(b, hkv, skv, d)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=32, block_k=32)
+    rep = hq // hkv
+    exp = R.flash_attention(q, jnp.repeat(k, rep, 1), jnp.repeat(v, rep, 1),
+                            causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(exp, np.float32), atol=atol)
+
+
+def test_blockwise_xla_matches_dense():
+    import repro.models.layers as lyr
+    rng = np.random.default_rng(5)
+    B, K_, G, S, hd = 1, 2, 2, 100, 16
+    qg = jnp.asarray(rng.standard_normal((B, K_, G, S, hd)), jnp.float32)
+    kt = jnp.asarray(rng.standard_normal((B, K_, S, hd)), jnp.float32)
+    vt = jnp.asarray(rng.standard_normal((B, K_, S, hd)), jnp.float32)
+    qa = jnp.arange(S)
+    old = lyr._BLK_Q, lyr._BLK_KV
+    lyr._BLK_Q, lyr._BLK_KV = 32, 16
+    try:
+        got = lyr._blockwise_attention(qg, kt, vt, qa, masked=True, window=None)
+    finally:
+        lyr._BLK_Q, lyr._BLK_KV = old
+    logits = jnp.einsum("bkgqd,bksd->bkgqs", qg, kt) * hd ** -0.5
+    mask = jnp.arange(S)[None, :] <= qa[:, None]
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    exp = jnp.einsum("bkgqs,bksd->bkgqd", jax.nn.softmax(logits, -1), vt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=1e-5)

@@ -1,0 +1,151 @@
+"""Per-arch reduced-config smoke tests + sequence-model consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_arch
+from repro.models import api
+from repro.models.rwkv6 import _wkv_chunked, _wkv_step
+from repro.models.mamba import ssd_chunked, ssd_step
+from repro.train import optimizer as OPT
+from repro.train import train_step as TS
+
+
+def _inputs(cfg, B, S, rng):
+    kw = {}
+    if cfg.family == "vlm":
+        kw["image_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.vision_tokens, cfg.vision_embed_dim)),
+            jnp.float32)
+    if cfg.family == "audio":
+        kw["audio_feats"] = jnp.asarray(
+            rng.standard_normal((B, S, cfg.audio_feat_dim)), jnp.float32)
+    return kw
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_forward_and_train_step(arch):
+    cfg = get_arch(arch).reduced()
+    rng = np.random.default_rng(0)
+    params, specs = api.init_params(cfg, jax.random.PRNGKey(0))
+    assert set(specs) == set(params)
+    B, S = 2, 16
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    kw = _inputs(cfg, B, S, rng)
+    logits, _, aux = api.forward(cfg, params, tokens, **kw)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+    batch = dict(tokens=tokens,
+                 labels=jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+                 **kw)
+    state, _ = TS.init_train_state(cfg, jax.random.PRNGKey(1))
+    step = TS.make_train_step(cfg, OPT.AdamWConfig(lr=1e-3, total_steps=10,
+                                                   warmup_steps=1))
+    new_state, metrics = jax.jit(step)(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(new_state["opt"]["step"]) == 1
+    # params actually moved
+    moved = any(
+        float(jnp.abs(new_state["params"][k] - state["params"][k]).max()) > 0
+        for k in state["params"])
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "hymba-1.5b", "rwkv6-1.6b",
+                                  "moonshot-v1-16b-a3b"])
+def test_prefill_decode_matches_teacher_forcing(arch):
+    """Decode with cache must reproduce full-context logits."""
+    cfg = get_arch(arch).reduced()
+    rng = np.random.default_rng(1)
+    params, _ = api.init_params(cfg, jax.random.PRNGKey(2))
+    B, S = 1, 12
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+
+    full_logits, _, _ = api.forward(cfg, params, tokens)
+
+    from repro.serve import serve_step as SRV
+    prefill = SRV.make_prefill(cfg, max_seq=S + 4)
+    decode = SRV.make_decode(cfg)
+    cache = api.init_decode_state(cfg, B, S + 4, jnp.float32)
+    split = S - 3
+    last, cache = prefill(params, tokens[:, :split], cache)
+    np.testing.assert_allclose(np.asarray(last),
+                               np.asarray(full_logits[:, split - 1]),
+                               atol=2e-3, rtol=2e-3)
+    for t in range(split, S):
+        last, cache = decode(params, tokens[:, t:t + 1], cache, jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(last),
+                                   np.asarray(full_logits[:, t]),
+                                   atol=2e-3, rtol=2e-3)
+
+
+def test_wkv_chunked_equals_naive():
+    rng = np.random.default_rng(0)
+    B, T, H, hd = 2, 37, 3, 8
+    r, k, v = (jnp.asarray(rng.standard_normal((B, T, H, hd)), jnp.float32)
+               for _ in range(3))
+    logw = -jnp.asarray(rng.uniform(0.01, 2.0, (B, T, H, hd)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((H, hd)), jnp.float32)
+    s0 = jnp.asarray(rng.standard_normal((B, H, hd, hd)), jnp.float32)
+    s = s0
+    ys = []
+    for t in range(T):
+        y, s = _wkv_step(r[:, t], k[:, t], v[:, t], logw[:, t], u, s)
+        ys.append(np.asarray(y))
+    y_c, s_c = _wkv_chunked(r, k, v, logw, u, s0, chunk=8)
+    np.testing.assert_allclose(np.asarray(y_c), np.stack(ys, 1), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_c), np.asarray(s), atol=1e-4)
+
+
+def test_ssd_chunked_equals_naive():
+    rng = np.random.default_rng(1)
+    Bt, T, H, dh, n = 2, 29, 3, 8, 4
+    x = jnp.asarray(rng.standard_normal((Bt, T, H, dh)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.1, 1.0, (Bt, T, H)), jnp.float32)
+    loga = -jnp.asarray(rng.uniform(0.01, 1.0, (Bt, T, H)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((Bt, T, n)), jnp.float32)  # head-shared
+    Cm = jnp.asarray(rng.standard_normal((Bt, T, n)), jnp.float32)
+    h0 = jnp.asarray(rng.standard_normal((Bt, H, n, dh)), jnp.float32)
+    h = h0
+    ys = []
+    for t in range(T):
+        y, h = ssd_step(x[:, t], dt[:, t], Bm[:, t], Cm[:, t], loga[:, t], h)
+        ys.append(np.asarray(y))
+    y_c, h_c = ssd_chunked(x, dt, Bm, Cm, loga, h0, chunk=8)
+    np.testing.assert_allclose(np.asarray(y_c), np.stack(ys, 1), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_c), np.asarray(h), atol=1e-4)
+
+
+def test_moe_matches_dense_per_expert_reference():
+    """Sort-based dispatch == explicit per-token top-k loop (numpy oracle)."""
+    from repro.models import moe as MOE
+    from repro.models.layers import ParamBuilder
+    cfg = get_arch("phi3.5-moe-42b-a6.6b").reduced()
+    rng = np.random.default_rng(3)
+    b = ParamBuilder(jax.random.PRNGKey(3))
+    MOE.moe_params(b, cfg, "", 1)
+    lp = {k: v[0] for k, v in b.params.items()}
+    x = jnp.asarray(rng.standard_normal((2, 6, cfg.d_model)), jnp.float32)
+    y, aux = MOE.moe_apply(lp, cfg, x)
+    assert y.shape == x.shape and bool(jnp.isfinite(y).all())
+    assert float(aux) > 0.5  # balanced-ish routing at init (≈1)
+
+    # numpy oracle: per-token dense top-k expert mix (capacity unbounded here;
+    # capacity >= tokens*k/E*cf is large enough at this size to drop nothing)
+    xf = np.asarray(x).reshape(-1, cfg.d_model)
+    logits = xf @ np.asarray(lp["router"])
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    exp_out = np.zeros_like(xf)
+    for t in range(xf.shape[0]):
+        top = np.argsort(-probs[t])[: cfg.top_k]
+        w = probs[t][top] / probs[t][top].sum()
+        for e, wi in zip(top, w):
+            g = xf[t] @ np.asarray(lp["w_gate"])[e]
+            u = xf[t] @ np.asarray(lp["w_up"])[e]
+            h = (g / (1 + np.exp(-g))) * u
+            exp_out[t] += wi * (h @ np.asarray(lp["w_down"])[e])
+    np.testing.assert_allclose(np.asarray(y).reshape(-1, cfg.d_model),
+                               exp_out, atol=2e-4, rtol=2e-4)

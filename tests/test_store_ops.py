@@ -1,0 +1,118 @@
+"""EscherStore: init, reads, insertion cases 1-3, horizontal ops, overflow
+chaining, error flags."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ops
+from repro.core.store import EMPTY, init_store, read_dense, read_sorted
+
+
+def build(data, max_card=8, max_edges=16, capacity=4096, granule=32):
+    lists = np.full((len(data), max_card), EMPTY, np.int32)
+    cards = np.array([len(x) for x in data], np.int32)
+    for i, x in enumerate(data):
+        lists[i, : len(x)] = sorted(x)
+    return init_store(jnp.asarray(lists), jnp.asarray(cards),
+                      max_edges=max_edges, capacity=capacity, granule=granule)
+
+
+DATA = [[0, 1, 2], [1, 3], [2, 3, 4, 5], [0, 5], [4, 6], [1, 2, 6]]
+
+
+def rows_to_sets(rows):
+    rows = np.asarray(rows)
+    return [set(r[r != EMPTY].tolist()) for r in rows]
+
+
+def test_init_and_read():
+    st = build(DATA)
+    got = rows_to_sets(read_dense(st, jnp.arange(6)))
+    assert got == [set(x) for x in DATA]
+    # block layout: paper granule sizing
+    assert int(st.free_ptr) == 6 * 32
+    # sorted read pads EMPTY to the end
+    rs = np.asarray(read_sorted(st, jnp.arange(2)))
+    assert rs[0].tolist()[:3] == [0, 1, 2]
+    assert (rs[0][3:] == EMPTY).all()
+
+
+def test_case1_reuse_same_block():
+    st = build(DATA)
+    st = ops.delete_hyperedges(st, jnp.array([1, 4]), jnp.ones(2, bool))
+    free_before = int(st.free_ptr)
+    nl = np.full((2, 8), EMPTY, np.int32)
+    nl[0, :2] = [7, 8]
+    nl[1, :3] = [9, 10, 11]
+    st, ranks = ops.insert_hyperedges(st, jnp.asarray(nl), jnp.array([2, 3]),
+                                      jnp.ones(2, bool))
+    assert sorted(np.asarray(ranks).tolist()) == [1, 4]  # ID reuse
+    assert int(st.free_ptr) == free_before               # NO new allocation
+    got = rows_to_sets(read_dense(st, ranks))
+    assert got == [{7, 8}, {9, 10, 11}]
+
+
+def test_case2_overflow_chaining():
+    st = build(DATA, max_card=48)
+    st = ops.delete_hyperedges(st, jnp.array([2]), jnp.ones(1, bool))
+    big = list(range(100, 140))                           # 40 > 31 usable
+    nl = np.full((1, 48), EMPTY, np.int32)
+    nl[0, :40] = big
+    st, ranks = ops.insert_hyperedges(st, jnp.asarray(nl), jnp.array([40]),
+                                      jnp.ones(1, bool))
+    assert int(ranks[0]) == 2
+    assert int(st.error) == 0
+    assert rows_to_sets(read_dense(st, ranks)) == [set(big)]
+    # chained: node has an overflow block
+    from repro.core import blockmgr as bm
+    idx = int(bm.cbt_index(jnp.int32(2), st.mgr.height))
+    assert int(st.mgr.addr1[idx]) >= 0
+
+
+def test_case3_fresh_allocation():
+    st = build(DATA)
+    nl = np.full((3, 8), EMPTY, np.int32)
+    for i in range(3):
+        nl[i, :2] = [20 + i, 30 + i]
+    st, ranks = ops.insert_hyperedges(st, jnp.asarray(nl),
+                                      jnp.full(3, 2, np.int32), jnp.ones(3, bool))
+    assert sorted(np.asarray(ranks).tolist()) == [6, 7, 8]  # fresh ranks
+    got = rows_to_sets(read_dense(st, ranks))
+    assert got == [{20, 30}, {21, 31}, {22, 32}]
+
+
+def test_capacity_overflow_sets_error_flag():
+    st = build(DATA, capacity=224)  # exactly 6*32+32: one insert fits, two don't
+    nl = np.full((2, 8), EMPTY, np.int32)
+    nl[:, :2] = [[50, 51], [52, 53]]
+    st, _ = ops.insert_hyperedges(st, jnp.asarray(nl), jnp.full(2, 2, np.int32),
+                                  jnp.ones(2, bool))
+    assert int(st.error) == 1
+
+
+def test_horizontal_grouped_updates():
+    st = build(DATA)
+    # 3 updates on the same hyperedge + 1 on another, single batch
+    st = ops.apply_vertex_updates(
+        st,
+        jnp.array([0, 0, 0, 2]),
+        jnp.array([7, 8, 1, 9]),
+        jnp.array([True, True, False, True]),
+        jnp.ones(4, bool),
+    )
+    got = rows_to_sets(read_dense(st, jnp.array([0, 2])))
+    assert got == [{0, 2, 7, 8}, {2, 3, 4, 5, 9}]
+
+
+def test_horizontal_duplicate_insert_is_noop():
+    st = build(DATA)
+    st2 = ops.apply_vertex_updates(st, jnp.array([0]), jnp.array([1]),
+                                   jnp.array([True]), jnp.ones(1, bool))
+    assert rows_to_sets(read_dense(st2, jnp.array([0])))[0] == {0, 1, 2}
+
+
+def test_delete_missing_vertex_is_noop():
+    st = build(DATA)
+    st2 = ops.apply_vertex_updates(st, jnp.array([1]), jnp.array([9]),
+                                   jnp.array([False]), jnp.ones(1, bool))
+    assert rows_to_sets(read_dense(st2, jnp.array([1])))[0] == {1, 3}

@@ -1,0 +1,185 @@
+"""Optimizer, data pipeline, checkpoint, fault recovery, compression,
+serving engine."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.distributed import compression as COMP
+from repro.models import api
+from repro.serve.engine import Engine, Request
+from repro.train import checkpoint as CKPT
+from repro.train import data as DATA
+from repro.train import fault as FAULT
+from repro.train import optimizer as OPT
+from repro.train import train_step as TS
+
+
+# ---------------------------------------------------------------- optimizer
+def test_adamw_matches_numpy_reference():
+    c = OPT.AdamWConfig(lr=1e-2, weight_decay=0.1, warmup_steps=0,
+                        total_steps=10**9, clip_norm=1e9, min_lr_frac=1.0)
+    params = dict(w=jnp.asarray([[1.0, -2.0], [0.5, 3.0]]))
+    opt = OPT.init_state(params)
+    grads = dict(w=jnp.asarray([[0.1, 0.2], [-0.3, 0.4]]))
+    new_p, new_opt, _ = OPT.apply_updates(c, params, opt, grads)
+
+    g = np.asarray(grads["w"])
+    m = 0.1 * g
+    v = 0.05 * g ** 2
+    upd = (m / (1 - 0.9)) / (np.sqrt(v / (1 - 0.95)) + c.eps)
+    upd += 0.1 * np.asarray(params["w"])
+    exp = np.asarray(params["w"]) - 1e-2 * upd
+    np.testing.assert_allclose(np.asarray(new_p["w"]), exp, rtol=1e-5)
+    assert int(new_opt["step"]) == 1
+
+
+def test_norms_excluded_from_weight_decay():
+    c = OPT.AdamWConfig(lr=1e-2, weight_decay=1.0, warmup_steps=0,
+                        total_steps=10**9, min_lr_frac=1.0)
+    params = dict(final_norm=jnp.ones(4), w=jnp.ones(4))
+    opt = OPT.init_state(params)
+    grads = dict(final_norm=jnp.zeros(4), w=jnp.zeros(4))
+    new_p, _, _ = OPT.apply_updates(c, params, opt, grads)
+    assert float(jnp.abs(new_p["final_norm"] - 1).max()) == 0   # untouched
+    assert float(jnp.abs(new_p["w"] - 1).max()) > 0             # decayed
+
+
+def test_schedule_warmup_and_cosine():
+    c = OPT.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110, min_lr_frac=0.1)
+    assert float(OPT.schedule(c, jnp.int32(5))) == pytest.approx(0.5)
+    assert float(OPT.schedule(c, jnp.int32(10))) == pytest.approx(1.0)
+    assert float(OPT.schedule(c, jnp.int32(110))) == pytest.approx(0.1, abs=1e-6)
+
+
+# ---------------------------------------------------------------- data
+def test_data_deterministic_and_partitioned():
+    cfg = DATA.DataConfig(vocab=100, seq_len=16, global_batch=8, seed=1)
+    g = DATA.global_batch(cfg, step=3)
+    h0 = DATA.host_batch(cfg, 3, host_id=0, num_hosts=4)
+    h2 = DATA.host_batch(cfg, 3, host_id=2, num_hosts=4)
+    assert (g["tokens"][:2] == h0["tokens"]).all()
+    assert (g["tokens"][4:6] == h2["tokens"]).all()
+    # same step twice -> identical (pure function of step)
+    assert (DATA.global_batch(cfg, 3)["tokens"] == g["tokens"]).all()
+    assert not (DATA.global_batch(cfg, 4)["tokens"] == g["tokens"]).all()
+    # labels shifted
+    assert (g["labels"][:, :-1] == g["tokens"][:, 1:]).all()
+
+
+# ---------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    state = dict(params=dict(a=jnp.arange(6).reshape(2, 3).astype(jnp.float32)),
+                 opt=dict(step=jnp.int32(7)), step=jnp.int32(7))
+    d = str(tmp_path)
+    CKPT.save(d, 7, state)
+    CKPT.save(d, 14, state)
+    step, restored = CKPT.restore(d)
+    assert step == 14
+    np.testing.assert_array_equal(np.asarray(restored["params"]["a"]),
+                                  np.asarray(state["params"]["a"]))
+    CKPT.save(d, 21, state)
+    CKPT.save(d, 28, state)
+    CKPT.gc_old(d, keep=2)
+    kept = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    assert kept == ["step_00000021", "step_00000028"]
+
+
+def test_checkpoint_ignores_incomplete_tmp(tmp_path):
+    d = str(tmp_path)
+    state = dict(a=jnp.zeros(3))
+    CKPT.save(d, 5, state)
+    os.makedirs(os.path.join(d, "step_00000009.tmp"))  # simulated crash
+    step, _ = CKPT.restore(d)
+    assert step == 5
+
+
+# ---------------------------------------------------------------- fault loop
+def _tiny_driver(tmp_path, inject_at=None):
+    cfg = get_arch("qwen2.5-3b").reduced()
+    opt_cfg = OPT.AdamWConfig(lr=1e-3, total_steps=20, warmup_steps=2)
+    dcfg = DATA.DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=2, seed=0)
+    step_fn = jax.jit(TS.make_train_step(cfg, opt_cfg), donate_argnums=(0,))
+
+    injected = {"done": False}
+
+    def injector(step):
+        if inject_at is not None and step == inject_at and not injected["done"]:
+            injected["done"] = True
+            raise RuntimeError("boom")
+
+    losses = {}
+    state = FAULT.run_loop(
+        init_state_fn=lambda: TS.init_train_state(cfg, jax.random.PRNGKey(0))[0],
+        train_step=step_fn,
+        batch_fn=lambda s: {k: jnp.asarray(v)
+                            for k, v in DATA.global_batch(dcfg, s).items()},
+        total_steps=12,
+        fault=FAULT.FaultConfig(ckpt_dir=str(tmp_path), ckpt_every=4),
+        on_metrics=lambda s, m: losses.__setitem__(s, float(m["loss"])),
+        failure_injector=injector)
+    return state, losses
+
+
+def test_fault_recovery_reproduces_failure_free_run(tmp_path):
+    s_clean, l_clean = _tiny_driver(tmp_path / "clean")
+    s_fail, l_fail = _tiny_driver(tmp_path / "fail", inject_at=6)
+    # deterministic replay: same final params bit-for-bit
+    for k in s_clean["params"]:
+        np.testing.assert_array_equal(np.asarray(s_clean["params"][k]),
+                                      np.asarray(s_fail["params"][k]))
+    assert l_clean[12] == pytest.approx(l_fail[12])
+
+
+# ---------------------------------------------------------------- compression
+def test_error_feedback_invariant():
+    rng = np.random.default_rng(0)
+    g = dict(w=jnp.asarray(rng.standard_normal((32, 32)), jnp.float32))
+    out1, ef1 = COMP.compress_decompress(g, None)
+    # compressed + residual == original (exact bookkeeping)
+    np.testing.assert_allclose(np.asarray(out1["w"]) + np.asarray(ef1["w"]),
+                               np.asarray(g["w"]), atol=1e-6)
+    # second round folds the residual back in
+    out2, ef2 = COMP.compress_decompress(g, ef1)
+    np.testing.assert_allclose(
+        np.asarray(out2["w"]) + np.asarray(ef2["w"]),
+        np.asarray(g["w"]) + np.asarray(ef1["w"]), atol=1e-6)
+
+
+def test_compressed_training_converges_similarly(tmp_path):
+    cfg = get_arch("qwen2.5-3b").reduced()
+    opt_cfg = OPT.AdamWConfig(lr=1e-3, total_steps=15, warmup_steps=2)
+    dcfg = DATA.DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=2, seed=0)
+
+    def run(compress):
+        state, _ = TS.init_train_state(cfg, jax.random.PRNGKey(0),
+                                       compress_grads=compress)
+        step = jax.jit(TS.make_train_step(cfg, opt_cfg, compress_grads=compress),
+                       donate_argnums=(0,))
+        loss = None
+        for s in range(10):
+            batch = {k: jnp.asarray(v) for k, v in DATA.global_batch(dcfg, s).items()}
+            state, m = step(state, batch)
+            loss = float(m["loss"])
+        return loss
+
+    base, comp = run(False), run(True)
+    assert abs(base - comp) / base < 0.05  # int8+EF tracks f32 closely
+
+
+# ---------------------------------------------------------------- engine
+def test_engine_slot_reuse_and_completion():
+    cfg = get_arch("qwen2.5-3b").reduced()
+    params, _ = api.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, slots=2, max_seq=64, dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    for rid in range(5):  # 5 requests through 2 slots -> reuse required
+        eng.submit(Request(rid=rid, max_new=4,
+                           prompt=rng.integers(0, cfg.vocab, 6).astype(np.int32)))
+    done = eng.run()
+    assert len(done) == 5
+    assert all(len(r.out) >= 5 for r in done)
+    assert len(eng.free) == 2  # all slots returned to the pool

@@ -1,0 +1,59 @@
+"""Temporal triads (THyMe+ window + ordered classes) vs brute force."""
+from itertools import combinations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hypergraph as H
+from repro.core import motifs, triads
+from conftest import rand_hyperedges
+
+
+def brute(edges, times, window):
+    hist = np.zeros(motifs.NUM_TEMPORAL, np.int64)
+    sets = [set(e) for e in edges]
+    n = len(edges)
+    for i, j, k in combinations(range(n), 3):
+        a, b, c = sets[i], sets[j], sets[k]
+        if (len(a & b) > 0) + (len(a & c) > 0) + (len(b & c) > 0) < 2:
+            continue
+        ts = [times[i], times[j], times[k]]
+        if max(ts) - min(ts) > window:
+            continue
+        x, y, z = (sets[[i, j, k][o]] for o in np.argsort(ts, kind="stable"))
+        code = int(motifs.region_code(
+            np.int32(len(x)), np.int32(len(y)), np.int32(len(z)),
+            np.int32(len(x & y)), np.int32(len(x & z)), np.int32(len(y & z)),
+            np.int32(len(x & y & z))))
+        hist[motifs.TEMPORAL_CLASS_ID[code]] += 1
+    return hist
+
+
+@pytest.mark.parametrize("seed,window", [(7, 300), (8, 100), (9, 1000)])
+def test_temporal_matches_brute(seed, window):
+    rng = np.random.default_rng(seed)
+    edges = rand_hyperedges(rng, 20, 12)
+    n = len(edges)
+    times = rng.permutation(1000)[:n].astype(np.int32)  # distinct stamps
+    hg = H.from_lists(edges, max_edges=64)
+    tarr = np.zeros(hg.n_edge_slots, np.int32)
+    tarr[:n] = times
+    ranks = jnp.arange(64, dtype=jnp.int32)
+    got = np.asarray(triads.count_triads(
+        hg, ranks, ranks < n, max_deg=48, chunk=256,
+        temporal=True, times=jnp.asarray(tarr), window=window))
+    exp = brute(edges, times, window)
+    assert (got == exp).all()
+
+
+def test_window_zero_only_simultaneous():
+    edges = [[0, 1], [1, 2], [0, 2]]
+    hg = H.from_lists(edges, max_edges=16)
+    tarr = np.zeros(hg.n_edge_slots, np.int32)
+    tarr[:3] = [5, 5, 9]
+    ranks = jnp.arange(16, dtype=jnp.int32)
+    got = np.asarray(triads.count_triads(
+        hg, ranks, ranks < 3, max_deg=8, chunk=64,
+        temporal=True, times=jnp.asarray(tarr), window=0))
+    assert int(got.sum()) == 0  # spread over 2 stamps > window 0

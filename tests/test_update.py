@@ -1,0 +1,137 @@
+"""Alg. 3 correctness: delta update == full static recount, all three triad
+families, across multiple churn batches."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as BL
+from repro.core import hypergraph as H
+from repro.core import triads as T
+from repro.core import update as U
+from repro.core.store import EMPTY
+from repro.core.vertex_triads import count_vertex_triads
+from conftest import rand_hyperedges
+
+MAXD, MAXR, MAXC = 64, 127, 8
+V = 18
+
+
+def _batch(rng, hg, n_del, n_ins):
+    present = np.asarray(hg.h2v.mgr.present)
+    hid = np.asarray(hg.h2v.mgr.hid)
+    live = hid[present == 1]
+    dels = rng.choice(live, size=min(n_del, len(live)), replace=False).astype(np.int32)
+    newe = rand_hyperedges(rng, n_ins, V)
+    nl = np.full((n_ins, MAXC), EMPTY, np.int32)
+    nc = np.zeros(n_ins, np.int32)
+    for i, e in enumerate(newe):
+        nl[i, : len(e)] = sorted(e)
+        nc[i] = len(e)
+    return (jnp.asarray(dels), jnp.ones(len(dels), bool),
+            jnp.asarray(nl), jnp.asarray(nc), jnp.ones(n_ins, bool))
+
+
+def test_hyperedge_update_equals_recount():
+    rng = np.random.default_rng(11)
+    hg = H.from_lists(rand_hyperedges(rng, 25, V), num_vertices=V,
+                      max_edges=128, max_card=MAXC)
+    counts = BL.mochy_static(hg, max_deg=MAXD, max_region=MAXR, chunk=256)
+    for _ in range(3):
+        d, dm, nl, nc, im = _batch(rng, hg, 5, 6)
+        hg, counts, _ = U.update_triad_counts(
+            hg, counts, d, dm, nl, nc, im,
+            max_deg=MAXD, max_region=MAXR, chunk=256)
+        ref = BL.mochy_static(hg, max_deg=MAXD, max_region=MAXR, chunk=256)
+        assert (np.asarray(counts) == np.asarray(ref)).all()
+
+
+def test_temporal_update_equals_recount():
+    rng = np.random.default_rng(21)
+    edges = rand_hyperedges(rng, 20, V)
+    hg = H.from_lists(edges, num_vertices=V, max_edges=128, max_card=MAXC)
+    times = jnp.asarray(
+        np.pad(rng.permutation(500)[:len(edges)].astype(np.int32),
+               (0, hg.n_edge_slots - len(edges))))
+    W = 200
+    counts = BL.thyme_static(hg, times, W, max_deg=MAXD, max_region=MAXR, chunk=256)
+    t_next = 1000
+    for _ in range(2):
+        d, dm, nl, nc, im = _batch(rng, hg, 4, 5)
+        ins_t = jnp.asarray(np.arange(t_next, t_next + nl.shape[0]).astype(np.int32))
+        t_next += 100
+        hg, counts, times = U.update_triad_counts(
+            hg, counts, d, dm, nl, nc, im,
+            max_deg=MAXD, max_region=MAXR, chunk=256,
+            temporal=True, times=times, ins_times=ins_t, window=W)
+        ref = BL.thyme_static(hg, times, W, max_deg=MAXD, max_region=MAXR, chunk=256)
+        assert (np.asarray(counts) == np.asarray(ref)).all()
+
+
+def test_vertex_update_equals_recount():
+    rng = np.random.default_rng(31)
+    hg = H.from_lists(rand_hyperedges(rng, 18, V), num_vertices=V,
+                      max_edges=128, max_card=MAXC)
+    counts = BL.stathyper_static(hg, V, max_nb=24, max_region=V, chunk=128)
+    for _ in range(2):
+        d, dm, nl, nc, im = _batch(rng, hg, 3, 4)
+        hg, counts = U.update_vertex_triad_counts(
+            hg, counts, V, d, dm, nl, nc, im,
+            max_nb=24, max_region=64, chunk=128)
+        ref = BL.stathyper_static(hg, V, max_nb=24, max_region=V, chunk=128)
+        assert (np.asarray(counts) == np.asarray(ref)).all()
+
+
+def test_affected_region_covers_two_hops():
+    hg = H.from_lists([[0, 1], [1, 2], [2, 3], [3, 4], [4, 5]],
+                      num_vertices=8, max_edges=32)
+    seeds = jnp.array([0], jnp.int32)
+    reg, m = U.affected_edges(hg, seeds, jnp.ones(1, bool),
+                              max_deg=16, max_region=31)
+    got = set(np.asarray(reg)[np.asarray(m)].tolist())
+    assert got == {0, 1, 2}  # edge 0 + 1-hop (1) + 2-hop (2)
+
+
+def test_delta_update_equals_recount():
+    """§Perf E2: containing-triple delta == full recount (adequate max_deg)."""
+    rng = np.random.default_rng(77)
+    hg = H.from_lists(rand_hyperedges(rng, 22, V), num_vertices=V,
+                      max_edges=128, max_card=MAXC)
+    counts = BL.mochy_static(hg, max_deg=MAXD, max_region=MAXR, chunk=256)
+    for _ in range(2):
+        d, dm, nl, nc, im = _batch(rng, hg, 4, 5)
+        hg, counts, _ = U.update_triad_counts_delta(
+            hg, counts, d, dm, nl, nc, im, max_deg=MAXD, chunk=256)
+        ref = BL.mochy_static(hg, max_deg=MAXD, max_region=MAXR, chunk=256)
+        assert (np.asarray(counts) == np.asarray(ref)).all()
+
+
+def test_bucketed_auto_update_equals_recount():
+    """§Perf E1: bucketed region specialisation is exact."""
+    rng = np.random.default_rng(88)
+    hg = H.from_lists(rand_hyperedges(rng, 20, V), num_vertices=V,
+                      max_edges=128, max_card=MAXC)
+    counts = BL.mochy_static(hg, max_deg=MAXD, max_region=MAXR, chunk=256)
+    d, dm, nl, nc, im = _batch(rng, hg, 3, 4)
+    hg, counts, _ = U.update_triad_counts_auto(
+        hg, counts, d, dm, nl, nc, im,
+        max_deg=MAXD, max_region=MAXR, chunk=256, min_region=32)
+    ref = BL.mochy_static(hg, max_deg=MAXD, max_region=MAXR, chunk=256)
+    assert (np.asarray(counts) == np.asarray(ref)).all()
+
+
+def test_delta_update_temporal_equals_recount():
+    rng = np.random.default_rng(99)
+    edges = rand_hyperedges(rng, 18, V)
+    hg = H.from_lists(edges, num_vertices=V, max_edges=128, max_card=MAXC)
+    times = jnp.asarray(
+        np.pad(rng.permutation(400)[:len(edges)].astype(np.int32),
+               (0, hg.n_edge_slots - len(edges))))
+    W = 150
+    counts = BL.thyme_static(hg, times, W, max_deg=MAXD, max_region=MAXR, chunk=256)
+    d, dm, nl, nc, im = _batch(rng, hg, 3, 4)
+    ins_t = jnp.asarray(np.arange(500, 500 + nl.shape[0]).astype(np.int32))
+    hg, counts, times = U.update_triad_counts_delta(
+        hg, counts, d, dm, nl, nc, im, max_deg=MAXD, chunk=256,
+        temporal=True, times=times, ins_times=ins_t, window=W)
+    ref = BL.thyme_static(hg, times, W, max_deg=MAXD, max_region=MAXR, chunk=256)
+    assert (np.asarray(counts) == np.asarray(ref)).all()

@@ -1,0 +1,53 @@
+"""Incident-vertex triads (StatHyper types 1/2/3) vs brute force."""
+from itertools import combinations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hypergraph as H
+from repro.core.vertex_triads import count_vertex_triads
+from conftest import rand_hyperedges
+
+
+def brute(edges, V):
+    sets = [set(e) for e in edges]
+    t1 = t2 = t3 = 0
+    for u, v, w in combinations(range(V), 3):
+        p = [sum(1 for s in sets if a in s and b in s)
+             for a, b in ((u, v), (v, w), (u, w))]
+        nuvw = sum(1 for s in sets if u in s and v in s and w in s)
+        con = sum(1 for x in p if x > 0)
+        if con == 3:
+            if nuvw > 0:
+                t1 += 1
+            else:
+                t3 += 1
+        elif con in (1, 2):
+            t2 += 1
+    return t1, t2, t3
+
+
+@pytest.mark.parametrize("seed,n,v", [(3, 15, 10), (5, 20, 12)])
+def test_vertex_triads_match_brute(seed, n, v):
+    rng = np.random.default_rng(seed)
+    edges = rand_hyperedges(rng, n, v)
+    hg = H.from_lists(edges, num_vertices=v + 4)
+    R = hg.num_vertices
+    vids = jnp.arange(R, dtype=jnp.int32)
+    mask = vids < v
+    got = tuple(np.asarray(count_vertex_triads(
+        hg, vids, mask, v, max_nb=16, chunk=64)).tolist())
+    assert got == brute(edges, v)
+
+
+def test_type3_requires_three_distinct_hyperedges():
+    # {0,1},{1,2},{0,2}: closed triple, no single covering edge -> type 3
+    hg = H.from_lists([[0, 1], [1, 2], [0, 2]], num_vertices=4)
+    vids = jnp.arange(hg.num_vertices, dtype=jnp.int32)
+    got = np.asarray(count_vertex_triads(hg, vids, vids < 3, 3, max_nb=8, chunk=16))
+    assert got.tolist() == [0, 0, 1]
+    # add covering edge -> becomes type 1
+    hg2 = H.from_lists([[0, 1], [1, 2], [0, 2], [0, 1, 2]], num_vertices=4)
+    got2 = np.asarray(count_vertex_triads(hg2, vids, vids < 3, 3, max_nb=8, chunk=16))
+    assert got2.tolist() == [1, 0, 0]
