@@ -203,6 +203,44 @@ def fig16_hornet():
     return out
 
 
+# ------------------------------------------------------------------ Fig 17
+def fig17_streaming():
+    """Streaming evolution engine (core/stream.py): end-to-end events/sec of
+    the scan driver vs batch size, against recount-per-batch — the cost an
+    event-log consumer without incremental machinery would pay.  The paper's
+    regime: a large standing hypergraph, a small churn stream on top."""
+    from repro.core import stream as S
+
+    out = []
+    N_BASE, N_EV = 1200, 96
+    hg0, nv = build("coauth", N_BASE)
+    events = GEN.event_stream(N_EV, nv, profile="coauth", insert_frac=0.6,
+                              seed=0, max_card=6, max_dt=2)
+    counts0 = BL.mochy_static(hg0, max_deg=MAXD, max_region=4 * N_BASE - 1,
+                              chunk=CHUNK)
+
+    def run(batch, steps):
+        log = S.log_from_events(events, max_card=8)
+        st = S.make_stream(hg0, log, counts0)
+        return S.run_stream(st, n_steps=steps, batch=batch, mode="edge",
+                            max_deg=MAXD, max_region=MAXR, chunk=CHUNK)
+
+    # recount-per-batch baseline: one full static count of the standing
+    # graph per scheduler step (the stream-less alternative)
+    us_recount, _ = timeit(BL.mochy_static, hg0, max_deg=MAXD,
+                           max_region=4 * N_BASE - 1, chunk=CHUNK)
+
+    for batch in (8, 24, 48):
+        steps = S.plan_steps(events, batch)
+        us, st = timeit(run, batch, steps)
+        evps = N_EV / (us / 1e6)
+        speedup = steps * us_recount / us
+        out.append(row(f"fig17/batch={batch}", us,
+                       f"events_per_sec={evps:.0f};"
+                       f"speedup_vs_recount_per_batch={speedup:.1f}x"))
+    return out
+
+
 # ------------------------------------------------------------------ Table IV
 def table4_summary(rows: list[str]) -> list[str]:
     import re
@@ -216,4 +254,4 @@ def table4_summary(rows: list[str]) -> list[str]:
 
 ALL = [fig6a_batch_size, fig6b_scale, fig6c_cardinality, fig6d_vertex_mods,
        fig7_9_mochy, fig10_mochy_gpu, fig11_stathyper, fig12_15_thyme,
-       fig16_hornet]
+       fig16_hornet, fig17_streaming]

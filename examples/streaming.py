@@ -1,0 +1,97 @@
+"""Live triad counts over a synthetic hyperedge event stream.
+
+Demonstrates the streaming evolution engine (core/stream.py, DESIGN.md §5):
+a timestamped insert/delete event log is coalesced into churn batches and
+scanned through the Alg. 3 incremental core, keeping hyperedge-based and
+temporal (sliding δ-window, with retention expiry) triad counts current.
+Final counts are verified against from-scratch recounts.
+
+    PYTHONPATH=src python examples/streaming.py [--events 300] [--batch 16]
+"""
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines as BL
+from repro.core import hypergraph as H
+from repro.core import motifs
+from repro.core import stream as S
+from repro.hypergraph import generators as GEN
+
+MAXD, MAXR, CHUNK = 32, 511, 1024
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--events", type=int, default=300)
+    ap.add_argument("--vertices", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--window", type=int, default=60, help="temporal triad δ")
+    ap.add_argument("--expiry", type=int, default=120,
+                    help="retention window: older inserts auto-delete")
+    ap.add_argument("--report-every", type=int, default=4,
+                    help="print live counts every N scheduler steps")
+    args = ap.parse_args()
+
+    nv = args.vertices
+    events = GEN.event_stream(args.events, nv, profile="coauth",
+                              insert_frac=0.75, seed=0, max_card=6, max_dt=2)
+    if not events:
+        print("empty stream: nothing to do")
+        return
+    n_ins = sum(1 for _, k, _ in events if k == "ins")
+    print(f"stream: {len(events)} events ({n_ins} ins, "
+          f"{len(events) - n_ins} del), t ∈ [0, {max(t for t, _, _ in events)}]")
+
+    hg = H.from_lists([], num_vertices=nv, max_edges=4 * args.events,
+                      max_card=8, max_vdeg=64, min_capacity=64 * args.events)
+    log = S.log_from_events(events, max_card=8)
+    edge = S.make_stream(hg, log, jnp.zeros(motifs.NUM_CLASSES, jnp.int32))
+    temp = S.make_stream(hg, S.log_from_events(events, max_card=8),
+                         jnp.zeros(motifs.NUM_TEMPORAL, jnp.int32))
+
+    kw = dict(batch=args.batch, max_deg=MAXD, max_region=MAXR, chunk=CHUNK)
+    n_edge = S.plan_steps(events, args.batch)
+    n_temp = S.plan_steps(events, args.batch, expiry=args.expiry)
+
+    # --- live hyperedge-based counts, reported as the stream drains
+    t0 = time.perf_counter()
+    done = 0
+    while done < n_edge:
+        step = min(args.report_every, n_edge - done)
+        edge = S.run_stream(edge, n_steps=step, mode="edge", **kw)
+        done += step
+        jax.block_until_ready(edge.counts)
+        print(f"  step {done:3d}/{n_edge}: live={int(edge.hg.h2v.n_live):4d} "
+              f"triads={int(edge.counts.sum()):6d} t={int(edge.t_now):4d}")
+    dt = time.perf_counter() - t0
+    print(f"hyperedge mode: {len(events) / dt:,.0f} events/sec "
+          f"(incl. per-report sync)")
+
+    # --- temporal counts with retention expiry, one fused scan
+    t0 = time.perf_counter()
+    temp = S.run_stream(temp, n_steps=n_temp, mode="temporal",
+                        window=args.window, expiry=args.expiry, **kw)
+    jax.block_until_ready(temp.counts)
+    dt = time.perf_counter() - t0
+    print(f"temporal mode (δ={args.window}, expiry={args.expiry}): "
+          f"{len(events) / dt:,.0f} events/sec, live={int(temp.hg.h2v.n_live)}, "
+          f"temporal triads={int(temp.counts.sum())}")
+
+    # --- verify against from-scratch recounts
+    ref_e = BL.mochy_static(edge.hg, max_deg=MAXD, max_region=MAXR, chunk=CHUNK)
+    ref_t = BL.thyme_static(temp.hg, temp.times, args.window,
+                            max_deg=MAXD, max_region=MAXR, chunk=CHUNK)
+    ok_e = bool((np.asarray(edge.counts) == np.asarray(ref_e)).all())
+    ok_t = bool((np.asarray(temp.counts) == np.asarray(ref_t)).all())
+    err = int(edge.error) | int(temp.error)
+    print(f"exact vs recount: hyperedge={ok_e} temporal={ok_t} "
+          f"sticky_error={err}")
+    assert ok_e and ok_t and err == 0
+
+
+if __name__ == "__main__":
+    main()

@@ -49,8 +49,14 @@ def from_lists(
     max_vdeg: int | None = None,
     granule: int = 32,
     slack: float = 2.0,
+    min_capacity: int = 0,
 ) -> Hypergraph:
-    """Host-side constructor from a Python list of vertex lists."""
+    """Host-side constructor from a Python list of vertex lists.
+
+    ``min_capacity`` floors both stores' flattened-array capacity, which is
+    otherwise derived from the *initial* edges only — required when starting
+    from an empty or tiny hypergraph that a stream will grow
+    (core/stream.py, DESIGN.md §5)."""
     n = len(edges)
     if num_vertices is None:
         num_vertices = 1 + max((max(e) for e in edges if e), default=0)
@@ -62,7 +68,9 @@ def from_lists(
     lists = np.full((n, max_card), EMPTY, np.int32)
     for i, e in enumerate(edges):
         lists[i, : len(e)] = sorted(e)
-    cap_h = int(slack * max(int((((cards + 1 + granule - 1) // granule) * granule).sum()), granule))
+    cap_h = max(
+        int(slack * max(int((((cards + 1 + granule - 1) // granule) * granule).sum()), granule)),
+        min_capacity)
     h2v = init_store(jnp.asarray(lists), jnp.asarray(cards),
                      max_edges=max_edges, capacity=cap_h, granule=granule)
 
@@ -79,7 +87,9 @@ def from_lists(
             vlists[v, fill[v]] = j
             fill[v] += 1
     vcards = fill.astype(np.int32)
-    cap_v = int(slack * max(int((((vcards + 1 + granule - 1) // granule) * granule).sum()), granule))
+    cap_v = max(
+        int(slack * max(int((((vcards + 1 + granule - 1) // granule) * granule).sum()), granule)),
+        min_capacity)
     v2h = init_store(jnp.asarray(vlists), jnp.asarray(vcards),
                      max_edges=num_vertices, capacity=cap_v, granule=granule)
     return Hypergraph(h2v=h2v, v2h=v2h)

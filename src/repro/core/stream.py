@@ -1,0 +1,389 @@
+"""Streaming evolution engine: event log → churn batches → live triad counts.
+
+The paper's setting is a *stream* of hyperedge churn; `update.py` only knows
+how to telescope one `(Del, Ins)` batch.  This module supplies the missing
+driver (DESIGN.md §5):
+
+  * ``EventLog`` — a fixed-shape ring buffer of timestamped hyperedge events
+    (INS carries the member list, DEL carries the *sequence number* of the
+    insert event it removes — producers never need to know store ranks);
+  * a batch scheduler (``_pop_batch``) that coalesces up to ``batch`` events
+    per step and enforces a consistency barrier: a DEL whose INS sits in the
+    same batch is deferred to the next batch, so deletes always resolve
+    against an edge the store has already materialised;
+  * ``run_stream`` — a ``jax.jit``/``lax.scan`` driver threading the Alg. 3
+    single-batch cores (``update.churn_step`` / ``update.vertex_churn_step``)
+    across batches for all three triad families.  In temporal mode an
+    optional sliding retention window ``expiry`` turns aged-out inserts into
+    automatic deletions (up to ``batch`` per step; the backlog drains over
+    subsequent steps — ``plan_steps`` sizes the scan to finish the drain).
+
+Error handling is sticky throughout: ring overflow on push, malformed
+deletes (DEL preceding its INS in the log), slot collisions (an edge
+outliving ``capacity`` subsequent events), and the stores' own overflow
+flags all fold into ``StreamState.error`` and survive the scan.
+
+Shape discipline: everything is fixed-shape.  ``batch`` bounds the events
+popped per step, the same ``batch`` bounds expiry deletions per step, so the
+churn core always sees ``2*batch`` deletion slots and ``batch`` insertion
+slots — one XLA trace per (batch, mode) regardless of stream content.
+
+Temporal mode inherits the THyMe+ tiebreak contract from triads.py: event
+timestamps must be pairwise distinct (triples are time-ordered and ties make
+the ordering role-dependent).  ``generators.event_stream`` emits strictly
+increasing timestamps for exactly this reason.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import update as U
+from repro.core.hypergraph import Hypergraph
+from repro.core.store import EMPTY
+
+INS = 0
+DEL = 1
+_I32_MIN = jnp.iinfo(jnp.int32).min
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EventLog:
+    t: jax.Array      # int32[C] timestamps
+    kind: jax.Array   # int32[C] INS | DEL
+    lists: jax.Array  # int32[C, max_card] sorted members (INS), EMPTY-padded
+    cards: jax.Array  # int32[C]
+    ref: jax.Array    # int32[C] DEL: sequence number of the INS it removes
+    head: jax.Array   # int32 scalar — next sequence number to consume
+    tail: jax.Array   # int32 scalar — next sequence number to produce
+    error: jax.Array  # int32 scalar — sticky push overflow / malformed DEL
+
+    @property
+    def capacity(self) -> int:
+        return self.t.shape[0]
+
+    @property
+    def n_pending(self) -> jax.Array:
+        return self.tail - self.head
+
+
+def make_event_log(capacity: int, max_card: int) -> EventLog:
+    z = jnp.zeros(capacity, jnp.int32)
+    return EventLog(
+        t=z, kind=z, lists=jnp.full((capacity, max_card), EMPTY, jnp.int32),
+        cards=z, ref=jnp.full(capacity, EMPTY, jnp.int32),
+        head=jnp.int32(0), tail=jnp.int32(0), error=jnp.int32(0),
+    )
+
+
+def push_events(log: EventLog, t, kind, lists, cards, ref, mask) -> EventLog:
+    """Append masked events at the tail (ring semantics).  Events that would
+    overrun ``capacity`` un-consumed slots are rejected and set the sticky
+    error flag; accepted events are always a prefix of the masked ones."""
+    C = log.capacity
+    m = mask.astype(jnp.int32)
+    seq = log.tail + jnp.cumsum(m) - m            # per-event sequence number
+    accepted = mask & (seq - log.head < C)
+    slot = jnp.where(accepted, seq % C, C)        # C = out of bounds -> drop
+    new = EventLog(
+        t=log.t.at[slot].set(t, mode="drop"),
+        kind=log.kind.at[slot].set(kind, mode="drop"),
+        lists=log.lists.at[slot].set(lists, mode="drop"),
+        cards=log.cards.at[slot].set(cards, mode="drop"),
+        ref=log.ref.at[slot].set(ref, mode="drop"),
+        head=log.head,
+        tail=log.tail + jnp.sum(accepted.astype(jnp.int32)),
+        error=log.error | jnp.any(mask & ~accepted).astype(jnp.int32),
+    )
+    return new
+
+
+def log_from_events(events, *, max_card: int, capacity: int | None = None) -> EventLog:
+    """Host builder.  ``events`` is a list of
+    ``(t, "ins", [v0, v1, ...])`` or ``(t, "del", ref)`` tuples, where
+    ``ref`` is the *index in this list* of the insert being removed."""
+    n = len(events)
+    C = capacity or max(n, 1)
+    t = np.zeros(C, np.int32)
+    kind = np.zeros(C, np.int32)
+    lists = np.full((C, max_card), EMPTY, np.int32)
+    cards = np.zeros(C, np.int32)
+    ref = np.full(C, EMPTY, np.int32)
+    if n > C:
+        raise ValueError(f"{n} events exceed log capacity {C}")
+    for i, (ti, k, payload) in enumerate(events):
+        t[i] = ti
+        if k == "ins":
+            kind[i] = INS
+            e = sorted(payload)
+            if len(e) > max_card:
+                raise ValueError(
+                    f"event {i}: {len(e)} members exceed max_card={max_card}")
+            lists[i, : len(e)] = e
+            cards[i] = len(e)
+        elif k == "del":
+            kind[i] = DEL
+            ref[i] = int(payload)
+        else:
+            raise ValueError(f"unknown event kind {k!r}")
+    return EventLog(
+        t=jnp.asarray(t), kind=jnp.asarray(kind), lists=jnp.asarray(lists),
+        cards=jnp.asarray(cards), ref=jnp.asarray(ref),
+        head=jnp.int32(0), tail=jnp.int32(n), error=jnp.int32(0),
+    )
+
+
+def _pop_batch(log: EventLog, batch: int):
+    """Coalesce up to ``batch`` pending events.  Returns
+    ``((t, kind, lists, cards, ref, ok), log')`` with fixed shapes.
+
+    Consistency barrier: a DEL whose INS has not been consumed yet
+    (``ref >= head``) either (a) sits earlier in this same batch — the batch
+    is truncated right before the DEL, so the next step sees the insert
+    already applied — or (b) sits at/after the DEL itself, which means the
+    log is malformed (delete precedes its insert); the event is dropped and
+    the sticky error set.  Case (a) cannot occur at offset 0, so the
+    scheduler always makes progress."""
+    C = log.capacity
+    offs = jnp.arange(batch, dtype=jnp.int32)
+    seq = log.head + offs
+    avail = seq < log.tail
+    slot = seq % C
+    t, kind, ref = log.t[slot], log.kind[slot], log.ref[slot]
+    lists, cards = log.lists[slot], log.cards[slot]
+
+    unconsumed = avail & (kind == DEL) & (ref >= log.head) & (ref != EMPTY)
+    defer = unconsumed & (ref < seq)        # its INS is earlier in this batch
+    malformed = unconsumed & (ref >= seq)   # DEL precedes its INS in the log
+    first_defer = jnp.min(jnp.where(defer, offs, batch))
+    take = avail & (offs < first_defer)
+    ok = take & ~malformed
+
+    log2 = EventLog(
+        t=log.t, kind=log.kind, lists=log.lists, cards=log.cards, ref=log.ref,
+        head=log.head + jnp.sum(take.astype(jnp.int32)),
+        tail=log.tail,
+        error=log.error | jnp.any(malformed & take).astype(jnp.int32),
+    )
+    return (t, kind, lists, cards, ref, ok), log2
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StreamState:
+    hg: Hypergraph
+    counts: jax.Array   # int32[26 | NUM_TEMPORAL | 3] depending on mode
+    times: jax.Array    # int32[n_edge_slots] timestamps by rank
+    log: EventLog
+    rank_of: jax.Array  # int32[C] log slot -> live store rank, EMPTY if dead
+    live_t: jax.Array   # int32[C] log slot -> timestamp of live insert
+    t_now: jax.Array    # int32 scalar — stream clock (max event time seen)
+    error: jax.Array    # int32 scalar — sticky
+
+
+def make_stream(hg: Hypergraph, log: EventLog, counts, *, times=None) -> StreamState:
+    """Initial driver state.  ``counts`` must be the triad histogram of
+    ``hg`` as it stands (zeros for an empty hypergraph, or a static count).
+    Edges pre-existing in ``hg`` are outside the event log's bookkeeping, so
+    they can never be expired or deleted by DEL events — start from an empty
+    hypergraph when using the retention window."""
+    C = log.capacity
+    if times is None:
+        times = jnp.zeros(hg.n_edge_slots, jnp.int32)
+    return StreamState(
+        hg=hg, counts=jnp.asarray(counts), times=jnp.asarray(times), log=log,
+        rank_of=jnp.full(C, EMPTY, jnp.int32),
+        live_t=jnp.full(C, EMPTY, jnp.int32),
+        t_now=jnp.int32(_I32_MIN), error=jnp.int32(0),
+    )
+
+
+def _dedupe_earliest(slots: jax.Array, ok: jax.Array):
+    """Keep only the first occurrence of each slot among ok entries."""
+    n = slots.shape[0]
+    eq = (slots[:, None] == slots[None, :]) & ok[:, None] & ok[None, :]
+    earlier = jnp.tril(jnp.ones((n, n), bool), k=-1)
+    dup = jnp.any(eq & earlier, axis=1)
+    return ok & ~dup
+
+
+def _stream_step(
+    state: StreamState, *, batch, mode, max_deg, max_nb, max_region, chunk,
+    window, expiry, v_total, backend,
+):
+    C = state.log.capacity
+    head0 = state.log.head
+    (t, kind, lists, cards, ref, ok), log = _pop_batch(state.log, batch)
+    slot = (head0 + jnp.arange(batch, dtype=jnp.int32)) % C
+
+    ins_ok = ok & (kind == INS)
+    del_ok = ok & (kind == DEL)
+
+    t_hi = jnp.max(jnp.where(ok, t, _I32_MIN))
+    t_now = jnp.maximum(state.t_now, t_hi)
+
+    # resolve explicit deletes through the slot -> rank map; a DEL of an edge
+    # already removed (double delete, or expired earlier) is a silent no-op
+    dslot = jnp.where(del_ok, ref % C, 0)
+    dranks = state.rank_of[dslot]
+    del_ok &= dranks != EMPTY
+    del_ok = _dedupe_earliest(dslot, del_ok)
+
+    # retention-window expiry: the oldest ≤ batch live inserts aged past
+    # t_now - expiry re-enter as deletions (backlog drains across steps).
+    # Slots freed by this batch's explicit deletes are excluded *before*
+    # the top-`batch` selection so they cannot consume the expiry quota —
+    # plan_steps relies on the full quota going to genuinely-live edges.
+    if expiry is not None:
+        key = jnp.where(state.live_t == EMPTY, jnp.iinfo(jnp.int32).max,
+                        state.live_t)
+        key = key.at[jnp.where(del_ok, dslot, C)].set(
+            jnp.iinfo(jnp.int32).max, mode="drop")
+        order = jnp.argsort(key)[:batch].astype(jnp.int32)
+        exp_ok = (key[order] <= t_now - expiry) & (t_now > _I32_MIN)
+        exp_ranks = state.rank_of[order]
+        exp_ok &= exp_ranks != EMPTY
+        exp_slots = order
+    else:
+        exp_slots = jnp.zeros(batch, jnp.int32)
+        exp_ranks = jnp.zeros(batch, jnp.int32)
+        exp_ok = jnp.zeros(batch, bool)
+
+    all_del = jnp.concatenate([jnp.where(del_ok, dranks, 0),
+                               jnp.where(exp_ok, exp_ranks, 0)])
+    all_del_mask = jnp.concatenate([del_ok, exp_ok])
+
+    ins_lists = jnp.where(ins_ok[:, None], lists, EMPTY)
+    ins_cards = jnp.where(ins_ok, cards, 0)
+    ins_times = jnp.where(ins_ok, t, 0)
+
+    if mode == "vertex":
+        hg, counts, new_ranks = U.vertex_churn_step(
+            state.hg, state.counts, v_total, all_del, all_del_mask,
+            ins_lists, ins_cards, ins_ok,
+            max_nb=max_nb, max_region=max_region, chunk=chunk, backend=backend)
+        times = state.times
+    else:
+        hg, counts, times, new_ranks = U.churn_step(
+            state.hg, state.counts, all_del, all_del_mask,
+            ins_lists, ins_cards, ins_ok,
+            max_deg=max_deg, max_region=max_region, chunk=chunk,
+            temporal=(mode == "temporal"), times=state.times,
+            ins_times=ins_times, window=window, backend=backend)
+
+    # slot -> (rank, time) bookkeeping: clear deletions/expiries, then record
+    # this batch's inserts (an insert reusing a just-freed slot wins)
+    drop = lambda a, i, m, v: a.at[jnp.where(m, i, C)].set(v, mode="drop")
+    rank_of = drop(state.rank_of, dslot, del_ok, EMPTY)
+    live_t = drop(state.live_t, dslot, del_ok, EMPTY)
+    rank_of = drop(rank_of, exp_slots, exp_ok, EMPTY)
+    live_t = drop(live_t, exp_slots, exp_ok, EMPTY)
+
+    # slot collision: an insert whose ring slot still tracks a live edge
+    # *after* this batch's deletions/expiries — the edge outlived `capacity`
+    # subsequent events; bookkeeping would be lost, so flag it sticky
+    collide = jnp.any(ins_ok & (live_t[slot] != EMPTY))
+
+    rank_of = rank_of.at[jnp.where(ins_ok, slot, C)].set(
+        jnp.where(ins_ok, new_ranks, EMPTY), mode="drop")
+    live_t = live_t.at[jnp.where(ins_ok, slot, C)].set(
+        jnp.where(ins_ok, t, EMPTY), mode="drop")
+
+    error = (state.error | log.error | hg.h2v.error | hg.v2h.error
+             | collide.astype(jnp.int32))
+    return StreamState(hg=hg, counts=counts, times=times, log=log,
+                       rank_of=rank_of, live_t=live_t, t_now=t_now,
+                       error=error)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_steps", "batch", "mode", "max_deg", "max_nb",
+                     "max_region", "chunk", "window", "expiry", "backend"),
+)
+def run_stream(
+    state: StreamState,
+    *,
+    n_steps: int,
+    batch: int,
+    mode: str = "edge",          # "edge" | "temporal" | "vertex"
+    max_deg: int = 32,
+    max_nb: int = 32,
+    max_region: int = 1023,
+    chunk: int = 1024,
+    window: int | None = None,   # temporal triad span bound δ (counting)
+    expiry: int | None = None,   # retention window (liveness; temporal mode)
+    v_total: jax.Array | int = 0,
+    backend: str | None = None,
+) -> StreamState:
+    """Scan ``n_steps`` scheduler batches through the Alg. 3 core.  One XLA
+    computation end to end; counts stay exact after every step (validated in
+    tests/test_stream.py).  Use ``plan_steps`` to size ``n_steps`` so the
+    log fully drains, including the expiry backlog."""
+    if mode not in ("edge", "temporal", "vertex"):
+        raise ValueError(f"unknown mode {mode!r}")
+    if batch > state.log.capacity:
+        raise ValueError(
+            f"batch={batch} exceeds log capacity {state.log.capacity}: "
+            "two events of one batch would share a ring slot")
+
+    def body(s, _):
+        s = _stream_step(
+            s, batch=batch, mode=mode, max_deg=max_deg, max_nb=max_nb,
+            max_region=max_region, chunk=chunk, window=window, expiry=expiry,
+            v_total=v_total, backend=backend)
+        return s, None
+
+    state, _ = jax.lax.scan(body, state, None, length=n_steps)
+    return state
+
+
+def plan_steps(events, batch: int, *, expiry: int | None = None) -> int:
+    """Host-side dry run of the scheduler: the exact number of ``run_stream``
+    steps needed to consume ``events`` *and* drain the expiry backlog.
+    Mirrors ``_pop_batch``'s consistency barrier and the per-step expiry
+    bound, so a scan of this length always finishes the stream."""
+    n = len(events)
+    head, steps = 0, 0
+    live: dict[int, int] = {}      # event index -> timestamp
+    t_now = None
+
+    def n_expired():
+        if expiry is None or t_now is None:
+            return 0
+        return sum(1 for ti in live.values() if ti <= t_now - expiry)
+
+    while head < n or n_expired() > 0:
+        steps += 1
+        take = 0
+        for off in range(min(batch, n - head)):
+            i = head + off
+            ti, k, payload = events[i]
+            if k == "del" and head <= payload < i:
+                break                     # consistency barrier
+            take += 1
+        popped = events[head : head + take]
+        for i, (ti, k, payload) in enumerate(popped, start=head):
+            t_now = ti if t_now is None else max(t_now, ti)
+            if k == "del" and payload in live:
+                del live[payload]
+        # expiry selects from the pre-insert live set, exactly as the device
+        # step does (this batch's inserts become expirable next step)
+        if expiry is not None and t_now is not None:
+            expired = sorted(
+                (i for i, ti in live.items() if ti <= t_now - expiry),
+                key=lambda i: live[i])[:batch]
+            for i in expired:
+                del live[i]
+        for i, (ti, k, payload) in enumerate(popped, start=head):
+            if k == "ins":
+                live[i] = ti
+        head += take
+        if take == 0 and head < n:        # cannot happen; guard the loop
+            raise RuntimeError("scheduler stalled")
+    return steps

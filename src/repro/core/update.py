@@ -76,11 +76,7 @@ def _union_region(r1, m1, r2, m2, max_region):
     return _dedupe_pad(allv, max_region)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("max_deg", "max_region", "chunk", "temporal", "window", "backend"),
-)
-def update_triad_counts(
+def churn_step(
     hg: Hypergraph,
     counts: jax.Array,
     del_ranks: jax.Array,
@@ -98,8 +94,9 @@ def update_triad_counts(
     window: int | None = None,
     backend: str | None = None,
 ):
-    """One churn batch for hyperedge-based (or temporal) triads.
-    Returns (hg', counts', times')."""
+    """Un-jitted single-batch core (Alg. 3 steps 1–6), reusable inside scans
+    (core/stream.py threads it across batches — DESIGN.md §5).
+    Returns (hg', counts', times', new_ranks)."""
     reg_d, md = affected_edges(hg, del_ranks, del_mask, max_deg=max_deg, max_region=max_region)
 
     hg_new, new_ranks = H.update_batch(hg, del_ranks, del_mask, ins_lists, ins_cards, ins_mask)
@@ -117,7 +114,39 @@ def update_triad_counts(
     kw = dict(max_deg=max_deg, chunk=chunk, temporal=temporal, window=window, backend=backend)
     c_del = T.count_triads(hg, reg, m, times=times, **kw)
     c_ins = T.count_triads(hg_new, reg, m, times=times_new, **kw)
-    return hg_new, counts - c_del + c_ins, times_new
+    return hg_new, counts - c_del + c_ins, times_new, new_ranks
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_deg", "max_region", "chunk", "temporal", "window", "backend"),
+)
+def update_triad_counts(
+    hg: Hypergraph,
+    counts: jax.Array,
+    del_ranks: jax.Array,
+    del_mask: jax.Array,
+    ins_lists: jax.Array,
+    ins_cards: jax.Array,
+    ins_mask: jax.Array,
+    *,
+    max_deg: int,
+    max_region: int,
+    chunk: int = 1024,
+    temporal: bool = False,
+    times: jax.Array | None = None,
+    ins_times: jax.Array | None = None,
+    window: int | None = None,
+    backend: str | None = None,
+):
+    """One churn batch for hyperedge-based (or temporal) triads.
+    Returns (hg', counts', times')."""
+    hg_new, counts_new, times_new, _ = churn_step(
+        hg, counts, del_ranks, del_mask, ins_lists, ins_cards, ins_mask,
+        max_deg=max_deg, max_region=max_region, chunk=chunk,
+        temporal=temporal, times=times, ins_times=ins_times,
+        window=window, backend=backend)
+    return hg_new, counts_new, times_new
 
 
 def _bucket(n: int, lo: int, hi: int) -> int:
@@ -198,6 +227,34 @@ def update_triad_counts_auto(
     return hg_new, counts - c_del + c_ins, times_new
 
 
+def vertex_churn_step(
+    hg: Hypergraph,
+    counts: jax.Array,       # int32[3]
+    v_total: jax.Array | int,
+    del_ranks: jax.Array,
+    del_mask: jax.Array,
+    ins_lists: jax.Array,
+    ins_cards: jax.Array,
+    ins_mask: jax.Array,
+    *,
+    max_nb: int,
+    max_region: int,
+    chunk: int = 1024,
+    backend: str | None = None,
+):
+    """Un-jitted single-batch core for incident-vertex triads, reusable
+    inside scans (DESIGN.md §5).  Returns (hg', counts', new_ranks)."""
+    reg_d, md = affected_vertices(hg, del_ranks, del_mask, max_nb=max_nb, max_region=max_region)
+    hg_new, new_ranks = H.update_batch(hg, del_ranks, del_mask, ins_lists, ins_cards, ins_mask)
+    reg_i, mi = affected_vertices(hg_new, new_ranks, ins_mask, max_nb=max_nb, max_region=max_region)
+    reg, m = _union_region(reg_d, md, reg_i, mi, max_region)
+
+    kw = dict(max_nb=max_nb, chunk=chunk, backend=backend)
+    c_del = VT.count_vertex_triads(hg, reg, m, v_total, **kw)
+    c_ins = VT.count_vertex_triads(hg_new, reg, m, v_total, **kw)
+    return hg_new, counts - c_del + c_ins, new_ranks
+
+
 @functools.partial(
     jax.jit, static_argnames=("max_nb", "max_region", "chunk", "backend")
 )
@@ -217,12 +274,8 @@ def update_vertex_triad_counts(
     backend: str | None = None,
 ):
     """One churn batch for incident-vertex triads. Returns (hg', counts')."""
-    reg_d, md = affected_vertices(hg, del_ranks, del_mask, max_nb=max_nb, max_region=max_region)
-    hg_new, new_ranks = H.update_batch(hg, del_ranks, del_mask, ins_lists, ins_cards, ins_mask)
-    reg_i, mi = affected_vertices(hg_new, new_ranks, ins_mask, max_nb=max_nb, max_region=max_region)
-    reg, m = _union_region(reg_d, md, reg_i, mi, max_region)
-
-    kw = dict(max_nb=max_nb, chunk=chunk, backend=backend)
-    c_del = VT.count_vertex_triads(hg, reg, m, v_total, **kw)
-    c_ins = VT.count_vertex_triads(hg_new, reg, m, v_total, **kw)
-    return hg_new, counts - c_del + c_ins
+    hg_new, counts_new, _ = vertex_churn_step(
+        hg, counts, v_total, del_ranks, del_mask, ins_lists, ins_cards,
+        ins_mask, max_nb=max_nb, max_region=max_region, chunk=chunk,
+        backend=backend)
+    return hg_new, counts_new

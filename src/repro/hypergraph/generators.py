@@ -102,6 +102,51 @@ def churn_batch(
     return dels, ins
 
 
+def event_stream(
+    n_events: int,
+    n_vertices: int,
+    *,
+    profile: str = "coauth",
+    insert_frac: float = 0.7,
+    seed: int = 0,
+    max_card: int = 8,
+    skew: float = 0.3,
+    max_dt: int = 3,
+) -> list[tuple]:
+    """Timestamped hyperedge churn stream for core/stream.py: a mix of
+    ``(t, "ins", members)`` inserts and ``(t, "del", ref)`` deletes, where
+    ``ref`` indexes the earlier insert event being removed (producers never
+    see store ranks).  Timestamps are *strictly increasing* with random gaps
+    in [1, max_dt] — temporal triad classification time-orders each triple
+    and requires distinct timestamps (the THyMe+ tiebreak contract, see
+    triads._ordered_code); deletes target a uniformly random live insert."""
+    rng = np.random.default_rng(seed)
+    p = PROFILES[profile]
+    weights = 1.0 / np.arange(1, n_vertices + 1) ** skew
+    weights /= weights.sum()
+    out: list[tuple] = []
+    live: list[int] = []
+    seen: set[tuple] = set()
+    t = 0
+    for i in range(n_events):
+        t += int(rng.integers(1, max_dt + 1))
+        if live and rng.random() >= insert_frac:
+            j = int(rng.integers(0, len(live)))
+            out.append((t, "del", live.pop(j)))
+            continue
+        e: tuple = ()
+        for _ in range(20):  # fresh edge preferred; duplicates legal
+            k = min(int(sample_cards(p, 1, rng, cap=max_card)[0]), n_vertices)
+            e = tuple(sorted(rng.choice(n_vertices, size=k, replace=False,
+                                        p=weights).tolist()))
+            if e not in seen:
+                break
+        seen.add(e)
+        out.append((t, "ins", list(e)))
+        live.append(i)
+    return out
+
+
 def pack_lists(edges: list[list[int]], max_card: int) -> tuple[np.ndarray, np.ndarray]:
     EMPTY = np.iinfo(np.int32).max
     lists = np.full((len(edges), max_card), EMPTY, np.int32)

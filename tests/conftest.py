@@ -11,6 +11,13 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: full system/model sweeps (minutes); deselect with "
+        "-m 'not slow' for the fast tier (see README.md)")
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -11,6 +11,8 @@ from repro.models.mamba import ssd_chunked, ssd_step
 from repro.train import optimizer as OPT
 from repro.train import train_step as TS
 
+pytestmark = pytest.mark.slow
+
 
 def _inputs(cfg, B, S, rng):
     kw = {}

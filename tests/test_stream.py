@@ -1,0 +1,257 @@
+"""Streaming evolution engine (core/stream.py): event-log scheduling and
+end-to-end count exactness — N scheduler batches through ``run_stream`` must
+equal a full static recount in all three triad modes, including the
+temporal retention-window (expiry) path.
+
+Tests sharing a (batch, n_steps, log capacity, bounds) signature reuse one
+XLA scan compilation — keep signatures aligned when adding cases, the
+suite's wall time is compile-dominated."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as BL
+from repro.core import hypergraph as H
+from repro.core import motifs
+from repro.core import stream as S
+from repro.core.store import EMPTY
+from repro.hypergraph import generators as GEN
+
+V, MAXC, MAXD, MAXR, CHUNK = 18, 8, 32, 127, 512
+
+
+def _empty_hg():
+    return H.from_lists([], num_vertices=V, max_edges=128, max_card=MAXC,
+                        max_vdeg=64, min_capacity=4096)
+
+
+def _run(events, counts, batch=8, n_steps=None, capacity=None, **kw):
+    log = S.log_from_events(events, max_card=MAXC, capacity=capacity)
+    st = S.make_stream(_empty_hg(), log, counts)
+    if n_steps is None:
+        n_steps = S.plan_steps(events, batch, expiry=kw.get("expiry"))
+    return S.run_stream(st, n_steps=n_steps, batch=batch, **kw)
+
+
+_EDGE_KW = dict(mode="edge", max_deg=MAXD, max_region=MAXR, chunk=CHUNK)
+
+
+def test_edge_mode_matches_recount():
+    events = GEN.event_stream(40, V, seed=1, max_card=6, insert_frac=0.7)
+    st = _run(events, jnp.zeros(motifs.NUM_CLASSES, jnp.int32), **_EDGE_KW)
+    assert int(st.error) == 0
+    assert int(st.log.n_pending) == 0
+    ref = BL.mochy_static(st.hg, max_deg=MAXD, max_region=MAXR, chunk=CHUNK)
+    assert (np.asarray(st.counts) == np.asarray(ref)).all()
+    assert int(st.counts.sum()) > 0
+
+
+def test_temporal_mode_matches_recount():
+    events = GEN.event_stream(40, V, seed=2, max_card=6, max_dt=4)
+    W = 50
+    st = _run(events, jnp.zeros(motifs.NUM_TEMPORAL, jnp.int32),
+              mode="temporal", max_deg=MAXD, max_region=MAXR, chunk=CHUNK,
+              window=W)
+    assert int(st.error) == 0
+    ref = BL.thyme_static(st.hg, st.times, W, max_deg=MAXD,
+                          max_region=MAXR, chunk=CHUNK)
+    assert (np.asarray(st.counts) == np.asarray(ref)).all()
+
+
+def test_temporal_expiry_matches_recount():
+    """Sliding retention window: aged-out inserts re-enter as deletions and
+    the final live set + counts still match a from-scratch recount."""
+    events = GEN.event_stream(50, V, seed=3, max_card=6, insert_frac=0.85,
+                              max_dt=4)
+    W, EXP = 60, 40
+    st = _run(events, jnp.zeros(motifs.NUM_TEMPORAL, jnp.int32),
+              mode="temporal", max_deg=MAXD, max_region=MAXR, chunk=CHUNK,
+              window=W, expiry=EXP)
+    assert int(st.error) == 0
+    assert int(st.log.n_pending) == 0
+    ref = BL.thyme_static(st.hg, st.times, W, max_deg=MAXD,
+                          max_region=MAXR, chunk=CHUNK)
+    assert (np.asarray(st.counts) == np.asarray(ref)).all()
+    # every surviving edge is inside the retention window, and expiry
+    # actually fired (more inserts than survivors + explicit deletes)
+    t_final = max(t for t, _, _ in events)
+    lt = np.asarray(st.live_t)
+    live_times = lt[lt != np.iinfo(np.int32).max]
+    assert (live_times > t_final - EXP).all()
+    n_ins = sum(1 for _, k, _ in events if k == "ins")
+    n_del = sum(1 for _, k, _ in events if k == "del")
+    assert len(live_times) < n_ins - n_del
+
+
+def test_vertex_mode_matches_recount():
+    events = GEN.event_stream(35, V, seed=4, max_card=6)
+    st = _run(events, jnp.zeros(3, jnp.int32),
+              mode="vertex", max_nb=32, max_region=64, chunk=128, v_total=V)
+    assert int(st.error) == 0
+    ref = BL.stathyper_static(st.hg, V, max_nb=32, max_region=V, chunk=128)
+    assert (np.asarray(st.counts) == np.asarray(ref)).all()
+
+
+def test_scheduler_semantics():
+    """Barrier / malformed / duplicate-delete handling, all through one
+    shared (capacity=8, batch=8, n_steps=2) compilation."""
+    fixed = dict(capacity=8, batch=8, n_steps=2, **_EDGE_KW)
+    zeros = jnp.zeros(motifs.NUM_CLASSES, jnp.int32)
+
+    # a DEL whose INS sits in the same batch is deferred, not dropped
+    events = [(0, "ins", [0, 1, 2]), (1, "ins", [1, 2, 3]), (2, "del", 0)]
+    assert S.plan_steps(events, 8) == 2      # barrier splits the batch
+    st = _run(events, zeros, **fixed)
+    assert int(st.error) == 0
+    assert int(st.hg.h2v.n_live) == 1        # edge 0 inserted then deleted
+    ref = BL.mochy_static(st.hg, max_deg=MAXD, max_region=MAXR, chunk=CHUNK)
+    assert (np.asarray(st.counts) == np.asarray(ref)).all()
+
+    # a DEL preceding its INS in the log is dropped with the sticky error
+    st = _run([(0, "del", 1), (1, "ins", [0, 1, 2])], zeros, **fixed)
+    assert int(st.error) == 1
+    assert int(st.hg.h2v.n_live) == 1        # the insert still applied
+
+    # double delete of one edge is a no-op (second resolves to EMPTY /
+    # same-batch duplicate is deduped)
+    events = [(0, "ins", [0, 1, 2]), (1, "ins", [2, 3, 4]),
+              (2, "del", 0), (3, "del", 0)]
+    st = _run(events, zeros, **fixed)
+    assert int(st.error) == 0
+    assert int(st.hg.h2v.n_live) == 1
+
+
+def test_push_overflow_sets_sticky_error():
+    log = S.make_event_log(4, MAXC)
+    t = jnp.arange(6, dtype=jnp.int32)
+    kind = jnp.zeros(6, jnp.int32)
+    lists = jnp.full((6, MAXC), EMPTY, jnp.int32).at[:, 0].set(1).at[:, 1].set(2)
+    cards = jnp.full(6, 2, jnp.int32)
+    ref = jnp.full(6, EMPTY, jnp.int32)
+    log = S.push_events(log, t, kind, lists, cards, ref, jnp.ones(6, bool))
+    assert int(log.error) == 1
+    assert int(log.tail) == 4                # accepted prefix only
+
+
+def _push_host(log, chunk_ev):
+    n = len(chunk_ev)
+    t = jnp.asarray([e[0] for e in chunk_ev], jnp.int32)
+    kind = jnp.asarray([S.DEL if e[1] == "del" else S.INS for e in chunk_ev])
+    lists = np.full((n, MAXC), EMPTY, np.int32)
+    cards = np.zeros(n, np.int32)
+    ref = np.full(n, EMPTY, np.int32)
+    for i, (_, k, payload) in enumerate(chunk_ev):
+        if k == "ins":
+            e = sorted(payload)
+            lists[i, : len(e)] = e
+            cards[i] = len(e)
+        else:
+            ref[i] = payload
+    return S.push_events(log, t, kind, jnp.asarray(lists), jnp.asarray(cards),
+                         jnp.asarray(ref), jnp.ones(n, bool))
+
+
+def test_ring_reuse_and_slot_collision():
+    """Online usage: a log smaller than the stream, drained and refilled.
+    Ring slots are reused safely while every edge dies within ``capacity``
+    subsequent events; an edge outliving its slot raises the sticky
+    collision flag instead of silently corrupting bookkeeping.  Both halves
+    share one (capacity=8, batch=4, n_steps=1) compilation."""
+    kw = dict(batch=4, **_EDGE_KW)
+    events = []
+    for g in range(6):                       # lifetime ≤ 3 events < capacity 8
+        i = len(events)
+        events.append((4 * g, "ins", [g % V, (g + 1) % V, (g + 2) % V]))
+        events.append((4 * g + 1, "ins", [(g + 1) % V, (g + 3) % V, (g + 5) % V]))
+        events.append((4 * g + 2, "del", i))
+        events.append((4 * g + 3, "del", i + 1))
+    st = S.make_stream(_empty_hg(), S.make_event_log(8, MAXC),
+                       jnp.zeros(motifs.NUM_CLASSES, jnp.int32))
+    for lo in range(0, len(events), 8):
+        st = dataclasses.replace(st, log=_push_host(st.log, events[lo:lo + 8]))
+        while int(st.log.n_pending) > 0:
+            st = S.run_stream(st, n_steps=1, **kw)
+    assert int(st.error) == 0
+    assert int(st.hg.h2v.n_live) == 0        # every insert was deleted
+    ref_counts = BL.mochy_static(st.hg, max_deg=MAXD, max_region=MAXR,
+                                 chunk=CHUNK)
+    assert (np.asarray(st.counts) == np.asarray(ref_counts)).all()
+
+    # collision: 8 inserts that never die, wrapped onto their live slots
+    st = S.make_stream(_empty_hg(), S.make_event_log(8, MAXC),
+                       jnp.zeros(motifs.NUM_CLASSES, jnp.int32))
+    first = [(i, "ins", [i, i + 1, i + 2]) for i in range(8)]
+    st = dataclasses.replace(st, log=_push_host(st.log, first))
+    for _ in range(2):
+        st = S.run_stream(st, n_steps=1, **kw)
+    assert int(st.error) == 0
+    second = [(8 + i, "ins", [i, i + 3, i + 6]) for i in range(8)]
+    st = dataclasses.replace(st, log=_push_host(st.log, second))
+    for _ in range(2):
+        st = S.run_stream(st, n_steps=1, **kw)
+    assert int(st.error) == 1
+
+
+def test_expiry_quota_not_consumed_by_explicit_deletes():
+    """Regression: expiry candidates are selected after this batch's
+    explicit deletes, so deleted slots cannot waste the per-step expiry
+    quota — plan_steps' drain guarantee depends on it."""
+    events = [(t, "ins", [t % V, (t + 1) % V, (t + 2) % V])
+              for t in range(1, 6)] + [(30, "del", 0)]
+    EXP = 10
+    st = _run(events, jnp.zeros(motifs.NUM_CLASSES, jnp.int32), batch=2,
+              mode="edge", max_deg=MAXD, max_region=MAXR, chunk=CHUNK,
+              expiry=EXP)
+    assert int(st.error) == 0
+    assert int(st.log.n_pending) == 0
+    lt = np.asarray(st.live_t)
+    live_times = lt[lt != np.iinfo(np.int32).max]
+    assert len(live_times) == 0              # everything expired or deleted
+
+
+def test_slot_reuse_within_one_batch_is_not_a_collision():
+    """Regression: a ring slot freed by a delete coalesced into the same
+    batch as the insert that reuses it must not raise the collision flag."""
+    st = S.make_stream(_empty_hg(), S.make_event_log(4, MAXC),
+                       jnp.zeros(motifs.NUM_CLASSES, jnp.int32))
+    kw = dict(batch=4, **_EDGE_KW)
+    st = dataclasses.replace(st, log=_push_host(st.log, [(0, "ins", [0, 1, 2])]))
+    st = S.run_stream(st, n_steps=1, **kw)   # consume seq 0 (slot 0)
+    more = [(1, "del", 0), (2, "ins", [1, 2, 3]), (3, "ins", [2, 3, 4]),
+            (4, "ins", [3, 4, 5])]           # seq 4 wraps onto freed slot 0
+    st = dataclasses.replace(st, log=_push_host(st.log, more))
+    st = S.run_stream(st, n_steps=1, **kw)
+    assert int(st.log.n_pending) == 0
+    assert int(st.error) == 0
+    assert int(st.hg.h2v.n_live) == 3
+
+
+@pytest.mark.slow
+def test_edge_mode_batch_size_invariance():
+    """Same stream, different coalescing — identical final counts/graph."""
+    events = GEN.event_stream(30, V, seed=5, max_card=6)
+    finals = []
+    for b in (2, 16):
+        st = _run(events, jnp.zeros(motifs.NUM_CLASSES, jnp.int32), batch=b,
+                  **_EDGE_KW)
+        assert int(st.error) == 0
+        finals.append((np.asarray(st.counts), int(st.hg.h2v.n_live)))
+    assert (finals[0][0] == finals[1][0]).all()
+    assert finals[0][1] == finals[1][1]
+
+
+@pytest.mark.slow
+def test_plan_steps_matches_device_drain():
+    """The host scheduler simulation and the device scheduler agree: after
+    plan_steps steps the log is drained, and one step earlier it is not."""
+    events = GEN.event_stream(30, V, seed=9, max_card=6, insert_frac=0.65)
+    B = 4
+    n = S.plan_steps(events, B)
+    log = S.log_from_events(events, max_card=MAXC)
+    st = S.make_stream(_empty_hg(), log, jnp.zeros(motifs.NUM_CLASSES, jnp.int32))
+    st_partial = S.run_stream(st, n_steps=n - 1, batch=B, **_EDGE_KW)
+    assert int(st_partial.log.n_pending) > 0
+    st_full = S.run_stream(st_partial, n_steps=1, batch=B, **_EDGE_KW)
+    assert int(st_full.log.n_pending) == 0

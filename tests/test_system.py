@@ -3,12 +3,15 @@ ESCHER) and the LM framework driver, exercised through the public APIs."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import baselines as BL
 from repro.core import hypergraph as H
 from repro.core import update as U
 from repro.core.store import EMPTY
 from conftest import rand_hyperedges
+
+pytestmark = pytest.mark.slow
 
 
 def test_end_to_end_dynamic_triad_maintenance():
