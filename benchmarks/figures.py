@@ -241,6 +241,65 @@ def fig17_streaming():
     return out
 
 
+# ------------------------------------------------------------------ Fig 18
+def fig18_sharded_scaling():
+    """Sharded triad engine (distributed/triads.py, DESIGN.md §3.2):
+    static-count µs/call and streaming events/sec vs device count.  Sweeps
+    the device counts available on this host — run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to get the full
+    1/2/4/8 sweep (CI does); on one device only the devices=1 rows emit."""
+    from repro.core import stream as S
+    from repro.core import triads as T
+    from repro.distributed import triads as DT
+
+    out = []
+    ndev = len(jax.devices())
+    sweep = [d for d in (1, 2, 4, 8) if d <= ndev]
+    if sweep[-1] != ndev:
+        sweep.append(ndev)      # always measure the full mesh
+
+    # static full-region count: µs/count vs device count
+    N = 1500
+    hg, nv = build("coauth", N)
+    reg, m = T.all_live_region(hg, 4 * N - 1)
+    base_us = None
+    for d in sweep:
+        mesh = DT.count_mesh(d)
+        us, res = timeit(DT.count_triads_sharded, hg, reg, m, mesh=mesh,
+                         max_deg=MAXD, chunk=CHUNK)
+        n_triads = max(int(res.sum()), 1)
+        base_us = base_us or us
+        out.append(row(f"fig18/static/devices={d}", us,
+                       f"us_per_ktriads={1e3 * us / n_triads:.2f};"
+                       f"scaling_vs_1dev={base_us / us:.2f}x"))
+
+    # streaming maintenance: events/sec vs device count (fig17's regime —
+    # a standing hypergraph with a small churn stream on top)
+    N_BASE, N_EV, BATCH = 1200, 64, 16
+    hg0, nv = build("coauth", N_BASE)
+    events = GEN.event_stream(N_EV, nv, profile="coauth", insert_frac=0.6,
+                              seed=0, max_card=6, max_dt=2)
+    counts0 = BL.mochy_static(hg0, max_deg=MAXD, max_region=4 * N_BASE - 1,
+                              chunk=CHUNK)
+    steps = S.plan_steps(events, BATCH)
+
+    def run(mesh):
+        log = S.log_from_events(events, max_card=8)
+        st = S.make_stream(hg0, log, counts0)
+        return S.run_stream(st, n_steps=steps, batch=BATCH, mode="edge",
+                            max_deg=MAXD, max_region=MAXR, chunk=CHUNK,
+                            mesh=mesh)
+
+    base_us = None
+    for d in sweep:
+        us, st = timeit(run, DT.count_mesh(d))
+        base_us = base_us or us
+        out.append(row(f"fig18/stream/devices={d}", us,
+                       f"events_per_sec={N_EV / (us / 1e6):.0f};"
+                       f"scaling_vs_1dev={base_us / us:.2f}x"))
+    return out
+
+
 # ------------------------------------------------------------------ Table IV
 def table4_summary(rows: list[str]) -> list[str]:
     import re
@@ -254,4 +313,4 @@ def table4_summary(rows: list[str]) -> list[str]:
 
 ALL = [fig6a_batch_size, fig6b_scale, fig6c_cardinality, fig6d_vertex_mods,
        fig7_9_mochy, fig10_mochy_gpu, fig11_stathyper, fig12_15_thyme,
-       fig16_hornet, fig17_streaming]
+       fig16_hornet, fig17_streaming, fig18_sharded_scaling]

@@ -4,10 +4,15 @@ incremental update against static recomputation.
 
     PYTHONPATH=src python examples/dynamic_triads.py [--edges 2000] [--batches 5]
 
-``--dryrun`` instead lowers + compiles the *distributed* triad-count step
-for the production meshes (DESIGN.md §3 "ESCHER at multi-pod scale"): the
-(center, pair) probe work-list shards over (pod, data), the store replicates
-per data-parallel group, and a scalar psum merges per-device histograms.
+The distributed engine itself lives in ``repro/distributed/triads.py``
+(DESIGN.md §3.2): every count here accepts a ``mesh`` and runs sharded on
+real devices — ``tests/test_distributed_triads.py`` exercises that on a
+host CPU mesh, and ``benchmarks/figures.py::fig18_sharded_scaling``
+measures it.  ``--dryrun`` is a thin wrapper over the engine's shared
+lowering (``distributed.triads.lower_count_step``): it compiles the sharded
+static-count step for the production meshes (single-pod 16×16, multi-pod
+2×16×16) without allocating a store and asserts the psum merge survives
+into the compiled HLO.
 """
 import os
 import sys
@@ -31,62 +36,24 @@ MAXD, MAXR, CHUNK = 32, 1023, 2048
 
 
 def dryrun(multi_pod: bool):
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.core import triads as T
+    """Thin wrapper over the engine's shared lowering (DESIGN.md §3.2)."""
+    from repro.distributed import triads as DT
     from repro.launch.mesh import make_production_mesh
 
     mesh = make_production_mesh(multi_pod=multi_pod)
-    dp = ("pod", "data") if multi_pod else ("data",)
-    n_edges, max_card, max_deg, region = 1_000_000, 32, 32, 1 << 16
-
-    # build the abstract (ShapeDtypeStruct) store directly — no allocation
-    import repro.core.blockmgr as bm
-    import repro.core.store as ST
-    h = bm.tree_height(n_edges)
-    size = 1 << (h + 1)
-    i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
-    mgr = bm.BlockManager(hid=i32(size), addr0=i32(size), cap0=i32(size),
-                          addr1=i32(size), cap1=i32(size), card=i32(size),
-                          present=i32(size), deleted=i32(size),
-                          avail=i32(size), height=h)
-    store = ST.EscherStore(A=i32(n_edges * 64), mgr=mgr, free_ptr=i32(),
-                           n_ranks=i32(), error=i32(), granule=32,
-                           max_card=max_card)
-    vmgr_h = bm.tree_height(n_edges // 2)
-    vsize = 1 << (vmgr_h + 1)
-    vmgr = bm.BlockManager(hid=i32(vsize), addr0=i32(vsize), cap0=i32(vsize),
-                           addr1=i32(vsize), cap1=i32(vsize), card=i32(vsize),
-                           present=i32(vsize), deleted=i32(vsize),
-                           avail=i32(vsize), height=vmgr_h)
-    vstore = ST.EscherStore(A=i32(n_edges * 64), mgr=vmgr, free_ptr=i32(),
-                            n_ranks=i32(), error=i32(), granule=32,
-                            max_card=64)
-    hg = H.Hypergraph(h2v=store, v2h=vstore)
-
-    def count_step(hg, region_ranks, region_mask):
-        return T.count_triads(hg, region_ranks, region_mask,
-                              max_deg=max_deg, chunk=4096)
-
-    rep = NamedSharding(mesh, P())
-    shard = NamedSharding(mesh, P(dp))
-    hg_sh = jax.tree_util.tree_map(lambda _: rep, hg)
-    with mesh:
-        lowered = jax.jit(
-            count_step,
-            in_shardings=(hg_sh, shard, shard),
-            out_shardings=rep,
-        ).lower(hg, i32(region), jax.ShapeDtypeStruct((region,), jnp.bool_))
-        compiled = lowered.compile()
-        print(f"[escher dry-run] mesh={'2x16x16' if multi_pod else '16x16'} "
-              f"edges={n_edges} region={region}: compiled OK")
-        try:
-            mem = compiled.memory_analysis()
-            print(f"  arg={mem.argument_size_in_bytes/1e9:.2f}GB "
-                  f"temp={mem.temp_size_in_bytes/1e9:.2f}GB")
-        except Exception:
-            pass
-        print(f"  collectives present: "
-              f"{'all-reduce' in compiled.as_text()}")
+    n_edges, region = 1_000_000, 1 << 16
+    compiled, has_all_reduce = DT.lower_count_step(
+        mesh, n_edges=n_edges, region=region, max_deg=32, chunk=4096)
+    print(f"[escher dry-run] mesh={'2x16x16' if multi_pod else '16x16'} "
+          f"edges={n_edges} region={region}: compiled OK")
+    try:
+        mem = compiled.memory_analysis()
+        print(f"  arg={mem.argument_size_in_bytes/1e9:.2f}GB "
+              f"temp={mem.temp_size_in_bytes/1e9:.2f}GB")
+    except Exception:
+        pass
+    print(f"  collectives present: {has_all_reduce}")
+    assert has_all_reduce, "psum merge missing from compiled HLO"
 
 
 def main():

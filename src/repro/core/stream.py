@@ -214,7 +214,7 @@ def _dedupe_earliest(slots: jax.Array, ok: jax.Array):
 
 def _stream_step(
     state: StreamState, *, batch, mode, max_deg, max_nb, max_region, chunk,
-    window, expiry, v_total, backend,
+    window, expiry, v_total, backend, mesh,
 ):
     C = state.log.capacity
     head0 = state.log.head
@@ -266,7 +266,8 @@ def _stream_step(
         hg, counts, new_ranks = U.vertex_churn_step(
             state.hg, state.counts, v_total, all_del, all_del_mask,
             ins_lists, ins_cards, ins_ok,
-            max_nb=max_nb, max_region=max_region, chunk=chunk, backend=backend)
+            max_nb=max_nb, max_region=max_region, chunk=chunk,
+            backend=backend, mesh=mesh)
         times = state.times
     else:
         hg, counts, times, new_ranks = U.churn_step(
@@ -274,7 +275,7 @@ def _stream_step(
             ins_lists, ins_cards, ins_ok,
             max_deg=max_deg, max_region=max_region, chunk=chunk,
             temporal=(mode == "temporal"), times=state.times,
-            ins_times=ins_times, window=window, backend=backend)
+            ins_times=ins_times, window=window, backend=backend, mesh=mesh)
 
     # slot -> (rank, time) bookkeeping: clear deletions/expiries, then record
     # this batch's inserts (an insert reusing a just-freed slot wins)
@@ -304,7 +305,8 @@ def _stream_step(
 @functools.partial(
     jax.jit,
     static_argnames=("n_steps", "batch", "mode", "max_deg", "max_nb",
-                     "max_region", "chunk", "window", "expiry", "backend"),
+                     "max_region", "chunk", "window", "expiry", "backend",
+                     "mesh"),
 )
 def run_stream(
     state: StreamState,
@@ -320,11 +322,14 @@ def run_stream(
     expiry: int | None = None,   # retention window (liveness; temporal mode)
     v_total: jax.Array | int = 0,
     backend: str | None = None,
+    mesh=None,                   # jax.sharding.Mesh | None — sharded counts
 ) -> StreamState:
     """Scan ``n_steps`` scheduler batches through the Alg. 3 core.  One XLA
     computation end to end; counts stay exact after every step (validated in
     tests/test_stream.py).  Use ``plan_steps`` to size ``n_steps`` so the
-    log fully drains, including the expiry backlog."""
+    log fully drains, including the expiry backlog.  With ``mesh`` every
+    step's affected-region counting shards across the mesh's devices
+    (distributed/triads.py — DESIGN.md §6); results are bit-identical."""
     if mode not in ("edge", "temporal", "vertex"):
         raise ValueError(f"unknown mode {mode!r}")
     if batch > state.log.capacity:
@@ -336,7 +341,7 @@ def run_stream(
         s = _stream_step(
             s, batch=batch, mode=mode, max_deg=max_deg, max_nb=max_nb,
             max_region=max_region, chunk=chunk, window=window, expiry=expiry,
-            v_total=v_total, backend=backend)
+            v_total=v_total, backend=backend, mesh=mesh)
         return s, None
 
     state, _ = jax.lax.scan(body, state, None, length=n_steps)

@@ -80,24 +80,16 @@ def _ordered_code(ca, cb, cc, iab, iac, ibc, iabc, ta, tb, tc):
     return motifs.region_code(cx, cy, cz, ixy, ixz, iyz, iabc)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("max_deg", "chunk", "temporal", "backend"),
-)
-def count_triads(
-    hg: Hypergraph,
-    region_ranks: jax.Array,   # int32[R]
-    region_mask: jax.Array,    # bool[R]
-    *,
-    max_deg: int,
-    chunk: int = 1024,
-    temporal: bool = False,
-    times: jax.Array | None = None,   # int32[n_edge_slots], by rank
-    window: int | None = None,
-    backend: str | None = None,
-):
-    """Histogram of triad classes among triples wholly inside the region.
-    Returns int32[26] (or int32[NUM_TEMPORAL] in temporal mode)."""
+def probe_worklist(hg: Hypergraph, region_ranks, region_mask, *, max_deg: int):
+    """Region-level probe work-list (DESIGN.md §3.2): the per-region
+    neighbour rows plus the flattened ``(center, pair)`` list the chunk
+    kernel consumes.  Shared lowering between the single-device driver
+    (``count_triads``) and the sharded driver (``distributed/triads.py``),
+    which partitions the flat pair list across mesh devices while the
+    region-level arrays replicate.
+
+    Returns ``(bitmap, nbrs, row_of, a, b, ok)`` where ``a/b/ok`` are the
+    unpadded flat pair arrays of length ``R * max_deg``."""
     n_slots = hg.n_edge_slots
     bitmap = _member_bitmap(n_slots, region_ranks, region_mask)
     ranks = jnp.where(region_mask, region_ranks, 0)
@@ -119,17 +111,32 @@ def count_triads(
         & (b_flat > a_flat)
     )
     b_safe = jnp.where(pair_ok, b_flat, 0)
+    return bitmap, nbrs, row_of, a_flat, b_safe, pair_ok
 
-    P = a_flat.shape[0]
-    pad = (-P) % chunk
+
+def pad_pairs(a, b, ok, multiple: int):
+    """Pad the flat pair list to a multiple of ``multiple`` with masked-out
+    entries (zero ranks, ok=False) so it splits evenly into chunks — and,
+    in the sharded driver, evenly across devices."""
+    P = a.shape[0]
+    pad = (-P) % multiple
     if pad:
-        a_flat = jnp.concatenate([a_flat, jnp.zeros(pad, jnp.int32)])
-        b_safe = jnp.concatenate([b_safe, jnp.zeros(pad, jnp.int32)])
-        pair_ok = jnp.concatenate([pair_ok, jnp.zeros(pad, bool)])
-    nchunk = a_flat.shape[0] // chunk
+        a = jnp.concatenate([a, jnp.zeros(pad, jnp.int32)])
+        b = jnp.concatenate([b, jnp.zeros(pad, jnp.int32)])
+        ok = jnp.concatenate([ok, jnp.zeros(pad, bool)])
+    return a, b, ok
 
+
+def chunk_counter(
+    hg: Hypergraph, nbrs, row_of, bitmap, t_by_rank, *,
+    chunk: int, temporal: bool, window, backend,
+):
+    """Per-chunk probe kernel: ``(a, b, ok)`` int32[chunk] triples -> raw
+    weighted class histogram (open triples ×3, closed ×2; divide the summed
+    histogram by 6).  Factored out of ``count_triads`` so the sharded driver
+    runs the identical kernel on its local slice of the pair list."""
+    n_slots = hg.n_edge_slots
     n_out = motifs.NUM_TEMPORAL if temporal else motifs.NUM_CLASSES
-    t_by_rank = times if times is not None else jnp.zeros(n_slots, jnp.int32)
 
     def one_chunk(args):
         a, b, ok = args
@@ -193,6 +200,38 @@ def count_triads(
             jnp.where(valid, w, 0).reshape(-1)
         )
         return hist
+
+    return one_chunk
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_deg", "chunk", "temporal", "backend"),
+)
+def count_triads(
+    hg: Hypergraph,
+    region_ranks: jax.Array,   # int32[R]
+    region_mask: jax.Array,    # bool[R]
+    *,
+    max_deg: int,
+    chunk: int = 1024,
+    temporal: bool = False,
+    times: jax.Array | None = None,   # int32[n_edge_slots], by rank
+    window: int | None = None,
+    backend: str | None = None,
+):
+    """Histogram of triad classes among triples wholly inside the region.
+    Returns int32[26] (or int32[NUM_TEMPORAL] in temporal mode)."""
+    bitmap, nbrs, row_of, a_flat, b_safe, pair_ok = probe_worklist(
+        hg, region_ranks, region_mask, max_deg=max_deg)
+    a_flat, b_safe, pair_ok = pad_pairs(a_flat, b_safe, pair_ok, chunk)
+    nchunk = a_flat.shape[0] // chunk
+
+    t_by_rank = (times if times is not None
+                 else jnp.zeros(hg.n_edge_slots, jnp.int32))
+    one_chunk = chunk_counter(
+        hg, nbrs, row_of, bitmap, t_by_rank,
+        chunk=chunk, temporal=temporal, window=window, backend=backend)
 
     hists = jax.lax.map(
         one_chunk,

@@ -93,9 +93,12 @@ def churn_step(
     ins_times: jax.Array | None = None,   # int32[m] timestamps of insertions
     window: int | None = None,
     backend: str | None = None,
+    mesh=None,                            # jax.sharding.Mesh | None
 ):
     """Un-jitted single-batch core (Alg. 3 steps 1–6), reusable inside scans
-    (core/stream.py threads it across batches — DESIGN.md §5).
+    (core/stream.py threads it across batches — DESIGN.md §5).  With ``mesh``
+    the affected-region pair list shards across the mesh's devices
+    (distributed/triads.py — DESIGN.md §3.2); counts are bit-identical.
     Returns (hg', counts', times', new_ranks)."""
     reg_d, md = affected_edges(hg, del_ranks, del_mask, max_deg=max_deg, max_region=max_region)
 
@@ -112,14 +115,19 @@ def churn_step(
     reg, m = _union_region(reg_d, md, reg_i, mi, max_region)
 
     kw = dict(max_deg=max_deg, chunk=chunk, temporal=temporal, window=window, backend=backend)
-    c_del = T.count_triads(hg, reg, m, times=times, **kw)
-    c_ins = T.count_triads(hg_new, reg, m, times=times_new, **kw)
+    count = T.count_triads
+    if mesh is not None:
+        from repro.distributed import triads as DT
+        count = functools.partial(DT.count_triads_sharded, mesh=mesh)
+    c_del = count(hg, reg, m, times=times, **kw)
+    c_ins = count(hg_new, reg, m, times=times_new, **kw)
     return hg_new, counts - c_del + c_ins, times_new, new_ranks
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("max_deg", "max_region", "chunk", "temporal", "window", "backend"),
+    static_argnames=("max_deg", "max_region", "chunk", "temporal", "window",
+                     "backend", "mesh"),
 )
 def update_triad_counts(
     hg: Hypergraph,
@@ -138,6 +146,7 @@ def update_triad_counts(
     ins_times: jax.Array | None = None,
     window: int | None = None,
     backend: str | None = None,
+    mesh=None,
 ):
     """One churn batch for hyperedge-based (or temporal) triads.
     Returns (hg', counts', times')."""
@@ -145,7 +154,7 @@ def update_triad_counts(
         hg, counts, del_ranks, del_mask, ins_lists, ins_cards, ins_mask,
         max_deg=max_deg, max_region=max_region, chunk=chunk,
         temporal=temporal, times=times, ins_times=ins_times,
-        window=window, backend=backend)
+        window=window, backend=backend, mesh=mesh)
     return hg_new, counts_new, times_new
 
 
@@ -241,22 +250,30 @@ def vertex_churn_step(
     max_region: int,
     chunk: int = 1024,
     backend: str | None = None,
+    mesh=None,
 ):
     """Un-jitted single-batch core for incident-vertex triads, reusable
-    inside scans (DESIGN.md §5).  Returns (hg', counts', new_ranks)."""
+    inside scans (DESIGN.md §5).  With ``mesh`` the affected-region vertex
+    pair list shards across the mesh's devices (DESIGN.md §3.2).
+    Returns (hg', counts', new_ranks)."""
     reg_d, md = affected_vertices(hg, del_ranks, del_mask, max_nb=max_nb, max_region=max_region)
     hg_new, new_ranks = H.update_batch(hg, del_ranks, del_mask, ins_lists, ins_cards, ins_mask)
     reg_i, mi = affected_vertices(hg_new, new_ranks, ins_mask, max_nb=max_nb, max_region=max_region)
     reg, m = _union_region(reg_d, md, reg_i, mi, max_region)
 
     kw = dict(max_nb=max_nb, chunk=chunk, backend=backend)
-    c_del = VT.count_vertex_triads(hg, reg, m, v_total, **kw)
-    c_ins = VT.count_vertex_triads(hg_new, reg, m, v_total, **kw)
+    count = VT.count_vertex_triads
+    if mesh is not None:
+        from repro.distributed import triads as DT
+        count = functools.partial(DT.count_vertex_triads_sharded, mesh=mesh)
+    c_del = count(hg, reg, m, v_total, **kw)
+    c_ins = count(hg_new, reg, m, v_total, **kw)
     return hg_new, counts - c_del + c_ins, new_ranks
 
 
 @functools.partial(
-    jax.jit, static_argnames=("max_nb", "max_region", "chunk", "backend")
+    jax.jit,
+    static_argnames=("max_nb", "max_region", "chunk", "backend", "mesh")
 )
 def update_vertex_triad_counts(
     hg: Hypergraph,
@@ -272,10 +289,11 @@ def update_vertex_triad_counts(
     max_region: int,
     chunk: int = 1024,
     backend: str | None = None,
+    mesh=None,
 ):
     """One churn batch for incident-vertex triads. Returns (hg', counts')."""
     hg_new, counts_new, _ = vertex_churn_step(
         hg, counts, v_total, del_ranks, del_mask, ins_lists, ins_cards,
         ins_mask, max_nb=max_nb, max_region=max_region, chunk=chunk,
-        backend=backend)
+        backend=backend, mesh=mesh)
     return hg_new, counts_new

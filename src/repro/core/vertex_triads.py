@@ -47,21 +47,15 @@ def vertex_neighbors(hg: Hypergraph, vids: jax.Array, max_nb: int) -> jax.Array:
     return cand[:, :max_nb]
 
 
-@functools.partial(jax.jit, static_argnames=("max_nb", "chunk", "backend"))
-def count_vertex_triads(
-    hg: Hypergraph,
-    region_vids: jax.Array,   # int32[R]
-    region_mask: jax.Array,   # bool[R]
-    v_total: jax.Array | int, # global |V| (live vertices)
-    *,
-    max_nb: int,
-    chunk: int = 1024,
-    backend: str | None = None,
-) -> jax.Array:
-    """Returns int32[3] = (type1, type2, type3) for triples whose connected
-    pairs lie inside the region (see module docstring for semantics)."""
-    from repro.kernels import ops as kops
+def vertex_worklist(hg: Hypergraph, region_vids, region_mask, *, max_nb: int):
+    """Region-level vertex pair work-list (DESIGN.md §3.2): the co-occurrence
+    adjacency restricted to the region, the closed-form wedge/edge terms, and
+    the flattened ``(u, v)`` pair list the triangle kernel consumes.  Shared
+    lowering between ``count_vertex_triads`` and the sharded driver in
+    ``distributed/triads.py``.
 
+    Returns ``(bitmap, u, v, ok, n_edges, wedges)`` with ``u/v/ok`` the
+    unpadded flat pair arrays of length ``R * max_nb``."""
     nv = hg.num_vertices
     bitmap = jnp.zeros(nv + 1, jnp.int32)
     safe = jnp.where(region_mask, jnp.minimum(region_vids, nv), nv)
@@ -82,14 +76,18 @@ def count_vertex_triads(
     v_flat = nbrs.reshape(-1)
     pair_ok = w_mask & (v_flat != EMPTY) & (v_flat > u_flat)
     v_safe = jnp.where(pair_ok, v_flat, 0)
+    return bitmap, u_flat, v_safe, pair_ok, n_edges, wedges
 
-    P = u_flat.shape[0]
-    pad = (-P) % chunk
-    if pad:
-        u_flat = jnp.concatenate([u_flat, jnp.zeros(pad, jnp.int32)])
-        v_safe = jnp.concatenate([v_safe, jnp.zeros(pad, jnp.int32)])
-        pair_ok = jnp.concatenate([pair_ok, jnp.zeros(pad, bool)])
-    nchunk = u_flat.shape[0] // chunk
+
+def chunk_triangles(hg: Hypergraph, bitmap, *, max_nb: int, chunk: int,
+                    backend):
+    """Per-chunk triangle kernel: ``(u, v, ok)`` int32[chunk] pairs ->
+    ``[triangles, covered-triangles]`` partial sums.  Factored out of
+    ``count_vertex_triads`` so the sharded driver runs the identical kernel
+    on its local slice of the pair list."""
+    from repro.kernels import ops as kops
+
+    nv = hg.num_vertices
 
     def one_chunk(args):
         u, v, ok = args
@@ -114,6 +112,45 @@ def count_vertex_triads(
         t_covered = jnp.sum(tri_ok & (nuvw > 0))
         return jnp.stack([t_all, t_covered])
 
+    return one_chunk
+
+
+def combine_counts(c3, covered, n_edges, wedges, v_total):
+    """Closed-form assembly of the (type1, type2, type3) histogram from the
+    triangle partials and the region-level wedge/edge terms (module
+    docstring).  Runs on replicated values after the psum merge in the
+    sharded driver."""
+    type1 = covered
+    type3 = c3 - covered
+    c2 = wedges - 3 * c3
+    s1 = n_edges * (jnp.asarray(v_total, jnp.int32) - 2)
+    c1 = s1 - 2 * c2 - 3 * c3
+    type2 = c1 + c2
+    return jnp.stack([type1, type2, type3]).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("max_nb", "chunk", "backend"))
+def count_vertex_triads(
+    hg: Hypergraph,
+    region_vids: jax.Array,   # int32[R]
+    region_mask: jax.Array,   # bool[R]
+    v_total: jax.Array | int, # global |V| (live vertices)
+    *,
+    max_nb: int,
+    chunk: int = 1024,
+    backend: str | None = None,
+) -> jax.Array:
+    """Returns int32[3] = (type1, type2, type3) for triples whose connected
+    pairs lie inside the region (see module docstring for semantics)."""
+    from repro.core.triads import pad_pairs
+
+    bitmap, u_flat, v_safe, pair_ok, n_edges, wedges = vertex_worklist(
+        hg, region_vids, region_mask, max_nb=max_nb)
+    u_flat, v_safe, pair_ok = pad_pairs(u_flat, v_safe, pair_ok, chunk)
+    nchunk = u_flat.shape[0] // chunk
+
+    one_chunk = chunk_triangles(hg, bitmap, max_nb=max_nb, chunk=chunk,
+                                backend=backend)
     per = jax.lax.map(
         one_chunk,
         (
@@ -123,10 +160,4 @@ def count_vertex_triads(
         ),
     )
     c3, covered = jnp.sum(per, axis=0)
-    type1 = covered
-    type3 = c3 - covered
-    c2 = wedges - 3 * c3
-    s1 = n_edges * (jnp.asarray(v_total, jnp.int32) - 2)
-    c1 = s1 - 2 * c2 - 3 * c3
-    type2 = c1 + c2
-    return jnp.stack([type1, type2, type3]).astype(jnp.int32)
+    return combine_counts(c3, covered, n_edges, wedges, v_total)

@@ -1,0 +1,235 @@
+"""Sharded triad engine: the (center, pair) probe work-list across a device
+mesh (DESIGN.md §3.2).
+
+The count kernels in ``core/triads.py`` / ``core/vertex_triads.py`` reduce a
+flat probe work-list — ``(center, pair)`` hyperedge triples, or ``(u, v)``
+vertex pairs — to a small integer histogram.  The work-list is the unit that
+scales (it is O(region · deg²) while the store is O(edges)), so this module
+shards exactly that:
+
+  * the ESCHER store, the region-level neighbour rows, and the membership
+    bitmap **replicate** on every device (``P()`` specs);
+  * the flat pair list **shards** over every mesh axis (``P(axis_names)``),
+    padded so it splits evenly;
+  * each device runs the identical chunk kernel (``core.triads.
+    chunk_counter`` / ``core.vertex_triads.chunk_triangles``) on its local
+    slice and the partial histograms merge with a single ``psum`` — int32
+    addition, so the result is **bit-identical** to the single-device path
+    for any device count (validated in tests/test_distributed_triads.py).
+
+Entry points mirror the single-device API with a ``mesh`` argument:
+``count_triads_sharded`` (hyperedge + temporal families) and
+``count_vertex_triads_sharded`` (incident-vertex family).  ``core/update.py``
+threads them through the churn cores (``mesh=`` on ``churn_step`` /
+``vertex_churn_step``) and ``core/stream.py`` through the scan driver, so
+static counts, Alg. 3 maintenance, and streaming all scale across devices.
+
+Testing recipe: the engine is backend-agnostic — run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to get an 8-way host
+CPU mesh (``count_mesh(8)``) and compare against the single-device counts.
+``lower_count_step`` lowers the same engine for the production TPU meshes
+without allocating a store (``examples/dynamic_triads.py --dryrun``).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import motifs
+from repro.core import triads as T
+from repro.core import vertex_triads as VT
+from repro.core.hypergraph import Hypergraph
+from repro.kernels import ops as kops
+
+
+# --------------------------------------------------------------- mesh helpers
+
+def count_mesh(n_shards: int | None = None, *, devices=None) -> Mesh:
+    """1-D counting mesh over ``n_shards`` devices (default: all available).
+
+    The probe work-list has no tensor structure to exploit, so a flat
+    ``("shard",)`` axis is the natural mesh for pure counting; the engine
+    itself accepts *any* mesh and shards over all its axes (see
+    ``shard_count``), which is how it rides the production LM meshes in
+    ``lower_count_step``."""
+    devices = list(devices if devices is not None else jax.devices())
+    n = n_shards if n_shards is not None else len(devices)
+    if not 1 <= n <= len(devices):
+        raise ValueError(f"n_shards={n} outside 1..{len(devices)}")
+    return Mesh(np.asarray(devices[:n]), ("shard",))
+
+
+def shard_count(mesh: Mesh) -> int:
+    """Number of work-list shards = total devices of the mesh (the pair list
+    shards over *every* axis; the store replicates on every device)."""
+    return int(math.prod(mesh.shape[a] for a in mesh.axis_names))
+
+
+def _replicated(tree):
+    return jax.tree_util.tree_map(lambda _: P(), tree)
+
+
+# ----------------------------------------------- hyperedge / temporal families
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "max_deg", "chunk", "temporal", "window",
+                     "backend"),
+)
+def count_triads_sharded(
+    hg: Hypergraph,
+    region_ranks: jax.Array,   # int32[R]
+    region_mask: jax.Array,    # bool[R]
+    *,
+    mesh: Mesh,
+    max_deg: int,
+    chunk: int = 1024,
+    temporal: bool = False,
+    times: jax.Array | None = None,   # int32[n_edge_slots], by rank
+    window: int | None = None,
+    backend: str | None = None,
+):
+    """Mesh-sharded twin of ``core.triads.count_triads`` — same histogram,
+    bit-identical, with the pair work-list split across ``mesh``'s devices
+    and one psum merging the partials.  ``mesh``/``window`` are static (the
+    shard_map body closes over them)."""
+    axes = tuple(mesh.axis_names)
+    nshard = shard_count(mesh)
+    backend = kops.resolve_backend(backend)
+
+    bitmap, nbrs, row_of, a, b, ok = T.probe_worklist(
+        hg, region_ranks, region_mask, max_deg=max_deg)
+    a, b, ok = T.pad_pairs(a, b, ok, chunk * nshard)
+    t_by_rank = (times if times is not None
+                 else jnp.zeros(hg.n_edge_slots, jnp.int32))
+
+    def local(hg, nbrs, row_of, bitmap, t_by_rank, a, b, ok):
+        one_chunk = T.chunk_counter(
+            hg, nbrs, row_of, bitmap, t_by_rank,
+            chunk=chunk, temporal=temporal, window=window, backend=backend)
+        nchunk = a.shape[0] // chunk
+        hists = jax.lax.map(
+            one_chunk,
+            (a.reshape(nchunk, chunk), b.reshape(nchunk, chunk),
+             ok.reshape(nchunk, chunk)))
+        return jax.lax.psum(jnp.sum(hists, axis=0), axes)
+
+    sharded = shard_map(
+        local, mesh=mesh,
+        in_specs=(_replicated(hg), P(), P(), P(), P(),
+                  P(axes), P(axes), P(axes)),
+        out_specs=P(),
+        check_rep=False,
+    )
+    return sharded(hg, nbrs, row_of, bitmap, t_by_rank, a, b, ok) // 6
+
+
+# -------------------------------------------------------- incident-vertex family
+
+@functools.partial(
+    jax.jit, static_argnames=("mesh", "max_nb", "chunk", "backend"))
+def count_vertex_triads_sharded(
+    hg: Hypergraph,
+    region_vids: jax.Array,   # int32[R]
+    region_mask: jax.Array,   # bool[R]
+    v_total: jax.Array | int,
+    *,
+    mesh: Mesh,
+    max_nb: int,
+    chunk: int = 1024,
+    backend: str | None = None,
+) -> jax.Array:
+    """Mesh-sharded twin of ``core.vertex_triads.count_vertex_triads``.
+
+    Only the triangle enumeration shards — the wedge/edge closed-form terms
+    are region-level scalars computed once on the replicated adjacency, and
+    ``combine_counts`` assembles the final (type1, type2, type3) from the
+    psum-merged triangle partials."""
+    axes = tuple(mesh.axis_names)
+    nshard = shard_count(mesh)
+    backend = kops.resolve_backend(backend)
+
+    bitmap, u, v, ok, n_edges, wedges = VT.vertex_worklist(
+        hg, region_vids, region_mask, max_nb=max_nb)
+    u, v, ok = T.pad_pairs(u, v, ok, chunk * nshard)
+
+    def local(hg, bitmap, u, v, ok):
+        one_chunk = VT.chunk_triangles(
+            hg, bitmap, max_nb=max_nb, chunk=chunk, backend=backend)
+        nchunk = u.shape[0] // chunk
+        per = jax.lax.map(
+            one_chunk,
+            (u.reshape(nchunk, chunk), v.reshape(nchunk, chunk),
+             ok.reshape(nchunk, chunk)))
+        return jax.lax.psum(jnp.sum(per, axis=0), axes)
+
+    sharded = shard_map(
+        local, mesh=mesh,
+        in_specs=(_replicated(hg), P(), P(axes), P(axes), P(axes)),
+        out_specs=P(),
+        check_rep=False,
+    )
+    c3, covered = sharded(hg, bitmap, u, v, ok)
+    return VT.combine_counts(c3, covered, n_edges, wedges, v_total)
+
+
+# ------------------------------------------------- production-mesh dry lowering
+
+def abstract_hypergraph(
+    n_edges: int, *, max_card: int = 32, granule: int = 32,
+) -> Hypergraph:
+    """``ShapeDtypeStruct`` skeleton of a production-sized two-way store —
+    for lowering/compiling the engine without allocating anything
+    (``lower_count_step``; previously private to the example's dry-run)."""
+    import repro.core.blockmgr as bm
+    import repro.core.store as ST
+
+    i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+
+    def abstract_store(n_lists: int, mc: int) -> ST.EscherStore:
+        h = bm.tree_height(n_lists)
+        size = 1 << (h + 1)
+        mgr = bm.BlockManager(
+            hid=i32(size), addr0=i32(size), cap0=i32(size),
+            addr1=i32(size), cap1=i32(size), card=i32(size),
+            present=i32(size), deleted=i32(size), avail=i32(size), height=h)
+        return ST.EscherStore(A=i32(n_edges * 64), mgr=mgr, free_ptr=i32(),
+                              n_ranks=i32(), error=i32(), granule=granule,
+                              max_card=mc)
+
+    return Hypergraph(h2v=abstract_store(n_edges, max_card),
+                      v2h=abstract_store(n_edges // 2, 2 * max_card))
+
+
+def lower_count_step(
+    mesh: Mesh,
+    *,
+    n_edges: int = 1_000_000,
+    region: int = 1 << 16,
+    max_deg: int = 32,
+    chunk: int = 4096,
+    backend: str | None = None,
+):
+    """Lower + compile the sharded static count for ``mesh`` on an abstract
+    store.  Returns ``(compiled, has_all_reduce)`` — the collective must be
+    present in the HLO or the merge was optimised away (the dry-run asserts
+    it).  This is the one distributed lowering; the example's ``--dryrun``
+    is a thin wrapper over it."""
+    hg = abstract_hypergraph(n_edges)
+    i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+
+    def step(hg, ranks, mask):
+        return count_triads_sharded(
+            hg, ranks, mask, mesh=mesh, max_deg=max_deg, chunk=chunk,
+            backend=backend)
+
+    lowered = jax.jit(step).lower(
+        hg, i32(region), jax.ShapeDtypeStruct((region,), jnp.bool_))
+    compiled = lowered.compile()
+    return compiled, ("all-reduce" in compiled.as_text())

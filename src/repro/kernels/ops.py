@@ -28,6 +28,20 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def resolve_backend(backend: str | None = None) -> str:
+    """Resolve ``backend`` to a concrete kernel choice, validating it.
+
+    Callers that fix the dispatch once per computation — the sharded drivers
+    in ``distributed/triads.py``, where every device of a ``shard_map`` body
+    must lower the *same* kernel — resolve here, outside the sharded region,
+    and pass the concrete string down.  ``None`` resolves from the platform
+    exactly like the per-op wrappers below."""
+    b = backend or default_backend()
+    if b not in ("pallas", "xla"):
+        raise ValueError(f"unknown kernel backend {b!r}")
+    return b
+
+
 def pair_intersect_count(x, y, *, backend: str | None = None):
     backend = backend or default_backend()
     if backend == "pallas":
