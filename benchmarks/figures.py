@@ -300,6 +300,74 @@ def fig18_sharded_scaling():
     return out
 
 
+# ------------------------------------------------------------------ Fig 19
+KERNEL_BENCH: list[dict] = []   # machine-readable rows; run.py dumps them
+                                # to BENCH_kernels.json next to the CSV
+
+
+def fig19_fused_kernel():
+    """Fused probe kernel (kernels/ops.fused_triple_stats) vs the unfused
+    sequence it replaced — four dispatches (pair + 2× stack + triple; on
+    the pallas backend the triple formerly launched membership separately,
+    making it five kernel launches) — and the packed-bitset backend, at
+    several (n, c, k) points.
+
+    The unfused sequence is timed as it actually executed: one dispatch per
+    kernel, each re-streaming the A/B/Cs rows — that is the 4–5× HBM-traffic
+    tax the fusion removes.  On this CPU host the xla backend stands in for
+    the device kernels; the *ratios* are the figure."""
+    import functools
+
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(19)
+
+    def mksets(n, c, univ):
+        out = np.full((n, c), EMPTY, np.int32)
+        for i in range(n):
+            m = int(rng.integers(min(c, univ) // 2, min(c, univ) + 1))
+            out[i, :m] = np.sort(rng.choice(univ, size=m, replace=False))
+        return jnp.asarray(out)
+
+    # one jit per launch, exactly like the five separate kernel dispatches
+    # of the pre-fusion chunk_counter inner loop
+    j_pair = jax.jit(functools.partial(kops.pair_intersect_count, backend="xla"))
+    j_stack = jax.jit(functools.partial(kops.stack_pair_intersect_count, backend="xla"))
+    j_triple = jax.jit(functools.partial(kops.triple_intersect_count, backend="xla"))
+
+    def unfused(a, b, cand):
+        return (j_pair(a, b), j_stack(a, cand), j_stack(b, cand),
+                j_triple(a, b, cand))
+
+    def fused(backend, n_bits):
+        return jax.jit(lambda a, b, cand: kops.fused_triple_stats(
+            a, b, cand, backend=backend, n_bits=n_bits))
+
+    out = []
+    for n, c, k, V in [(1024, 32, 16, 1024), (512, 128, 8, 4096),
+                       (256, 256, 8, 8192)]:
+        a, b = mksets(n, c, V), mksets(n, c, V)
+        cand = jnp.stack([mksets(k, c, V) for _ in range(n)])
+        us_unfused, _ = timeit(unfused, a, b, cand)
+        us_fused, _ = timeit(fused("xla", V), a, b, cand)
+        us_bitset, _ = timeit(fused("bitset", V), a, b, cand)
+        auto = kops.resolve_backend(None, c=c, n_bits=V)
+        KERNEL_BENCH.append({
+            "n": n, "c": c, "k": k, "n_bits": V,
+            "us_unfused": round(us_unfused, 1),
+            "us_fused_xla": round(us_fused, 1),
+            "us_fused_bitset": round(us_bitset, 1),
+            "speedup_fused_vs_unfused": round(us_unfused / us_fused, 2),
+            "speedup_bitset_vs_unfused": round(us_unfused / us_bitset, 2),
+            "auto_backend": auto,
+        })
+        # "fused=" not "speedup=": table4 aggregates paper-speedup rows only
+        out.append(row(f"fig19/n={n}/c={c}/k={k}", us_fused,
+                       f"fused_vs_unfused={us_unfused / us_fused:.1f}x;"
+                       f"bitset={us_unfused / us_bitset:.1f}x;auto={auto}"))
+    return out
+
+
 # ------------------------------------------------------------------ Table IV
 def table4_summary(rows: list[str]) -> list[str]:
     import re
@@ -313,4 +381,5 @@ def table4_summary(rows: list[str]) -> list[str]:
 
 ALL = [fig6a_batch_size, fig6b_scale, fig6c_cardinality, fig6d_vertex_mods,
        fig7_9_mochy, fig10_mochy_gpu, fig11_stathyper, fig12_15_thyme,
-       fig16_hornet, fig17_streaming, fig18_sharded_scaling]
+       fig16_hornet, fig17_streaming, fig18_sharded_scaling,
+       fig19_fused_kernel]

@@ -1,11 +1,14 @@
 """Benchmark runner — one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV.  Kernel-level figures additionally
+dump machine-readable ``BENCH_kernels.json`` next to the CSV, so the perf
+trajectory of the probe hot path is tracked across PRs.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig10]
+    PYTHONPATH=src python -m benchmarks.run [--only fig19]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -33,6 +36,13 @@ def main() -> None:
         print(f"# {fn.__name__} done in {time.time() - t0:.1f}s", file=sys.stderr)
     for r in figures.table4_summary(all_rows):
         print(r)
+    if figures.KERNEL_BENCH:
+        with open("BENCH_kernels.json", "w") as f:
+            json.dump({"figure": "fig19_fused_kernel",
+                       "unit": "us_per_call",
+                       "points": figures.KERNEL_BENCH}, f, indent=2)
+        print("# wrote BENCH_kernels.json "
+              f"({len(figures.KERNEL_BENCH)} points)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -135,3 +135,14 @@ def read_sorted(store: EscherStore, ranks: jax.Array) -> jax.Array:
     """Dense read with rows sorted ascending (EMPTY pads to the end) — the
     layout the intersection kernels expect."""
     return jnp.sort(read_dense(store, ranks), axis=1)
+
+
+def dedupe_sorted(rows: jax.Array) -> jax.Array:
+    """Sort rows along the last axis and collapse duplicate values to EMPTY
+    (re-sorted so pads sink to the end) — the canonical sorted-set
+    normaliser shared by the triad work-list builders (core/triads.py
+    candidate rows, core/vertex_triads.py co-occurrence neighbours)."""
+    s = jnp.sort(rows, axis=-1)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(s[..., :1], bool), s[..., 1:] == s[..., :-1]], axis=-1)
+    return jnp.sort(jnp.where(dup, EMPTY, s), axis=-1)

@@ -329,7 +329,11 @@ def run_stream(
     tests/test_stream.py).  Use ``plan_steps`` to size ``n_steps`` so the
     log fully drains, including the expiry backlog.  With ``mesh`` every
     step's affected-region counting shards across the mesh's devices
-    (distributed/triads.py — DESIGN.md §6); results are bit-identical."""
+    (distributed/triads.py — DESIGN.md §6); results are bit-identical.
+    ``backend`` reaches the fused probe kernel through the shared chunk
+    lowerings (``"pallas"``/``"xla"``/``"bitset"``, or None to auto-select
+    — kernels/ops.resolve_backend); histograms are backend-invariant
+    (tests/test_backend_parity.py)."""
     if mode not in ("edge", "temporal", "vertex"):
         raise ValueError(f"unknown mode {mode!r}")
     if batch > state.log.capacity:

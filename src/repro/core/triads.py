@@ -25,7 +25,7 @@ import jax.numpy as jnp
 
 from repro.core import motifs
 from repro.core.hypergraph import Hypergraph, neighbors
-from repro.core.store import EMPTY, read_sorted
+from repro.core.store import EMPTY, dedupe_sorted, read_sorted
 from repro.kernels import ops as kops
 
 _CANON = jnp.asarray(motifs.CANON)
@@ -44,12 +44,6 @@ def _restrict(vals, bitmap):
     safe = jnp.minimum(vals, bitmap.shape[0] - 1)
     ok = (vals != EMPTY) & (bitmap[safe] == 1)
     return jnp.where(ok, vals, EMPTY)
-
-
-def _dedupe_sorted(row):
-    s = jnp.sort(row)
-    dup = jnp.concatenate([jnp.zeros_like(s[:1], bool), s[1:] == s[:-1]])
-    return jnp.sort(jnp.where(dup, EMPTY, s))
 
 
 def _ordered_code(ca, cb, cc, iab, iac, ibc, iabc, ta, tb, tc):
@@ -134,9 +128,19 @@ def chunk_counter(
     """Per-chunk probe kernel: ``(a, b, ok)`` int32[chunk] triples -> raw
     weighted class histogram (open triples ×3, closed ×2; divide the summed
     histogram by 6).  Factored out of ``count_triads`` so the sharded driver
-    runs the identical kernel on its local slice of the pair list."""
+    runs the identical kernel on its local slice of the pair list.
+
+    The intersection hot spot is ONE fused kernel launch per chunk
+    (``kops.fused_triple_stats``): the A/B/Cs tiles stream from HBM once and
+    all four joint sizes (iab, iac, ibc, iabc) come out of the same pass —
+    previously five launches (pair + membership + 2× stack + triple) each
+    re-reading the rows.  ``backend`` resolves here (bitset auto-selected
+    for high-cardinality edges over dense universes — the
+    ``kops.resolve_backend`` cost rule, DESIGN.md §2.5)."""
     n_slots = hg.n_edge_slots
     n_out = motifs.NUM_TEMPORAL if temporal else motifs.NUM_CLASSES
+    n_bits = hg.num_vertices
+    backend = kops.resolve_backend(backend, c=hg.h2v.max_card, n_bits=n_bits)
 
     def one_chunk(args):
         a, b, ok = args
@@ -145,7 +149,7 @@ def chunk_counter(
         cand = jnp.concatenate([na, nb], axis=1)          # [chunk, 2D]
         cand = _restrict(cand, bitmap)
         cand = jnp.where((cand == a[:, None]) | (cand == b[:, None]), EMPTY, cand)
-        cand = jax.vmap(_dedupe_sorted)(cand)
+        cand = dedupe_sorted(cand)
         K = cand.shape[1]
 
         A = read_sorted(hg.h2v, a)                        # [chunk, c]
@@ -160,10 +164,10 @@ def chunk_counter(
         cb = card[hidx(b)]
         cc = card[hidx(c_safe)]
 
-        iab = kops.pair_intersect_count(A, B, backend=backend)            # [chunk]
-        iac = kops.stack_pair_intersect_count(A, Cs, backend=backend)     # [chunk, K]
-        ibc = kops.stack_pair_intersect_count(B, Cs, backend=backend)
-        iabc = kops.triple_intersect_count(A, B, Cs, backend=backend)
+        # one fused launch: iab[chunk], iac/ibc/iabc[chunk, K]
+        # (rows are read_sorted / dedupe_sorted output -> already sorted)
+        iab, iac, ibc, iabc = kops.fused_triple_stats(
+            A, B, Cs, backend=backend, n_bits=n_bits, assume_sorted=True)
 
         valid = ok[:, None] & (cand != EMPTY)
         if temporal:
@@ -329,6 +333,8 @@ def count_triads_containing(
 
     n_out = motifs.NUM_TEMPORAL if temporal else motifs.NUM_CLASSES
     t_by_rank = times if times is not None else jnp.zeros(n_slots, jnp.int32)
+    kbackend = kops.resolve_backend(
+        backend, c=hg.h2v.max_card, n_bits=hg.num_vertices)
 
     def one_chunk(args):
         a, b, c, okc = args
@@ -339,10 +345,12 @@ def count_triads_containing(
         card = hg.h2v.mgr.card
         hidx = lambda r: bm.cbt_index(r, hg.h2v.mgr.height)
         ca, cb, cc = card[hidx(a)], card[hidx(b)], card[hidx(c)]
-        iab = kops.pair_intersect_count(A, B, backend=backend)
-        iac = kops.triple_intersect_count(A, A, C, backend=backend)[:, 0]
-        ibc = kops.triple_intersect_count(B, B, C, backend=backend)[:, 0]
-        iabc = kops.triple_intersect_count(A, B, C, backend=backend)[:, 0]
+        # one fused launch with a k=1 candidate stack replaces the former
+        # pair + 3× triple sequence (|A∩C| = |A∩A∩C| etc.)
+        iab, iac, ibc, iabc = kops.fused_triple_stats(
+            A, B, C, backend=kbackend, n_bits=hg.num_vertices,
+            assume_sorted=True)
+        iac, ibc, iabc = iac[:, 0], ibc[:, 0], iabc[:, 0]
         if temporal:
             ta, tb, tc = t_by_rank[a], t_by_rank[b], t_by_rank[c]
             code = _ordered_code(ca, cb, cc, iab, iac, ibc, iabc, ta, tb, tc)

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 
 from repro.core import blockmgr as bm
 from repro.core.hypergraph import Hypergraph
-from repro.core.store import EMPTY, read_dense, read_sorted
+from repro.core.store import EMPTY, dedupe_sorted, read_dense, read_sorted
 
 
 def vertex_neighbors(hg: Hypergraph, vids: jax.Array, max_nb: int) -> jax.Array:
@@ -41,10 +41,7 @@ def vertex_neighbors(hg: Hypergraph, vids: jax.Array, max_nb: int) -> jax.Array:
     members = read_dense(hg.h2v, flat_h).reshape(m, vdeg, -1)
     cand = jnp.where((hl == EMPTY)[:, :, None], EMPTY, members).reshape(m, -1)
     cand = jnp.where(cand == vids[:, None], EMPTY, cand)
-    cand = jnp.sort(cand, axis=1)
-    dup = jnp.concatenate([jnp.zeros((m, 1), bool), cand[:, 1:] == cand[:, :-1]], axis=1)
-    cand = jnp.sort(jnp.where(dup, EMPTY, cand), axis=1)
-    return cand[:, :max_nb]
+    return dedupe_sorted(cand)[:, :max_nb]
 
 
 def vertex_worklist(hg: Hypergraph, region_vids, region_mask, *, max_nb: int):
@@ -84,10 +81,19 @@ def chunk_triangles(hg: Hypergraph, bitmap, *, max_nb: int, chunk: int,
     """Per-chunk triangle kernel: ``(u, v, ok)`` int32[chunk] pairs ->
     ``[triangles, covered-triangles]`` partial sums.  Factored out of
     ``count_vertex_triads`` so the sharded driver runs the identical kernel
-    on its local slice of the pair list."""
+    on its local slice of the pair list.
+
+    The intersection hot spot is ONE kernel launch per chunk: only the
+    triple size |Eu∩Ev∩Ew| feeds the covered-triangle test, so this uses
+    ``kops.triple_intersect_count`` (membership fused in-kernel) rather
+    than the four-output fused_triple_stats — same single launch, none of
+    the discarded iab/iac/ibc tile work.  The universe here is *hyperedge
+    ranks*, so the bitset backend packs against ``hg.n_edge_slots``."""
     from repro.kernels import ops as kops
 
     nv = hg.num_vertices
+    n_bits = hg.n_edge_slots
+    backend = kops.resolve_backend(backend, c=hg.v2h.max_card, n_bits=n_bits)
 
     def one_chunk(args):
         u, v, ok = args
@@ -106,7 +112,8 @@ def chunk_triangles(hg: Hypergraph, bitmap, *, max_nb: int, chunk: int,
         Ev = read_sorted(hg.v2h, v)
         w_safe = jnp.where(w_cand == EMPTY, 0, w_cand)
         Ew = read_sorted(hg.v2h, w_safe.reshape(-1)).reshape(chunk, w_cand.shape[1], -1)
-        nuvw = kops.triple_intersect_count(Eu, Ev, Ew, backend=backend)
+        nuvw = kops.triple_intersect_count(
+            Eu, Ev, Ew, backend=backend, n_bits=n_bits, assume_sorted=True)
         tri_ok = ok[:, None] & (w_cand != EMPTY)
         t_all = jnp.sum(tri_ok)
         t_covered = jnp.sum(tri_ok & (nuvw > 0))

@@ -101,7 +101,11 @@ def count_triads_sharded(
     shard_map body closes over them)."""
     axes = tuple(mesh.axis_names)
     nshard = shard_count(mesh)
-    backend = kops.resolve_backend(backend)
+    # resolve once, outside the shard_map body, with the same (c, n_bits)
+    # auto-selection inputs as the single-device path — every device must
+    # lower the identical kernel, bitset included
+    backend = kops.resolve_backend(
+        backend, c=hg.h2v.max_card, n_bits=hg.num_vertices)
 
     bitmap, nbrs, row_of, a, b, ok = T.probe_worklist(
         hg, region_ranks, region_mask, max_deg=max_deg)
@@ -153,7 +157,10 @@ def count_vertex_triads_sharded(
     psum-merged triangle partials."""
     axes = tuple(mesh.axis_names)
     nshard = shard_count(mesh)
-    backend = kops.resolve_backend(backend)
+    # vertex-family universe is hyperedge *ranks* (v2h rows) — resolve with
+    # that bound so the bitset auto-rule matches chunk_triangles
+    backend = kops.resolve_backend(
+        backend, c=hg.v2h.max_card, n_bits=hg.n_edge_slots)
 
     bitmap, u, v, ok, n_edges, wedges = VT.vertex_worklist(
         hg, region_vids, region_mask, max_nb=max_nb)

@@ -128,15 +128,103 @@ def stack_pair_intersect_count(
     )(a, cand)
 
 
-def _triple_count_kernel(a_ref, inb_ref, cand_ref, out_ref):
+def _triple_count_kernel(a_ref, b_ref, cand_ref, out_ref):
     a = a_ref[...]                        # [bn, c]
-    inb = inb_ref[...]                    # [bn, c]
+    b = b_ref[...]                        # [bn, c]
     cand = cand_ref[...]                  # [bn, bk, c]
+    # A∩B membership computed in-kernel per row tile, reused across all bk
+    # candidates — one launch, no separate membership kernel
+    inb = jnp.any(
+        (a[:, :, None] == b[:, None, :]) & (b[:, None, :] != EMPTY), axis=2
+    ) & (a != EMPTY)
     eq = (a[:, None, :, None] == cand[:, :, None, :]) & (
         cand[:, :, None, :] != EMPTY
     )
     in_c = jnp.any(eq, axis=3) & (a[:, None, :] != EMPTY)    # [bn, bk, c]
-    out_ref[...] = jnp.sum(in_c & (inb[:, None, :] == 1), axis=2).astype(jnp.int32)
+    out_ref[...] = jnp.sum(in_c & inb[:, None, :], axis=2).astype(jnp.int32)
+
+
+def _fused_stats_kernel(a_ref, b_ref, cand_ref,
+                        iab_ref, iac_ref, ibc_ref, iabc_ref):
+    a = a_ref[...]                        # [bn, c]
+    b = b_ref[...]                        # [bn, c]
+    cand = cand_ref[...]                  # [bn, bk, c]
+    c = a.shape[1]
+    # j < i lower-triangle via iota (TPU-safe; no jnp.tril in Mosaic)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    earlier = jj < ii
+    # row-level masks, computed once and reused across all bk candidates
+    fa = ~jnp.any((a[:, :, None] == a[:, None, :]) & earlier, axis=2) & (
+        a != EMPTY
+    )
+    fb = ~jnp.any((b[:, :, None] == b[:, None, :]) & earlier, axis=2) & (
+        b != EMPTY
+    )
+    in_b = jnp.any(
+        (a[:, :, None] == b[:, None, :]) & (b[:, None, :] != EMPTY), axis=2
+    ) & (a != EMPTY)
+    ab = in_b & fa
+    iab_ref[...] = jnp.sum(ab, axis=1).astype(jnp.int32)
+    # candidate tiles: two eq tiles per candidate, three counts out
+    cv = cand[:, :, None, :] != EMPTY
+    in_ca = jnp.any((a[:, None, :, None] == cand[:, :, None, :]) & cv, axis=3)
+    in_cb = jnp.any((b[:, None, :, None] == cand[:, :, None, :]) & cv, axis=3)
+    iac_ref[...] = jnp.sum(in_ca & fa[:, None, :], axis=2).astype(jnp.int32)
+    ibc_ref[...] = jnp.sum(in_cb & fb[:, None, :], axis=2).astype(jnp.int32)
+    iabc_ref[...] = jnp.sum(in_ca & ab[:, None, :], axis=2).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows", "block_k"))
+def fused_triple_stats(
+    a, b, cand, *, interpret: bool = True,
+    block_rows: int | None = None, block_k: int = 8,
+):
+    """One-pass multi-intersection: ``(iab[n], iac[n,k], ibc[n,k],
+    iabc[n,k])`` for a,b: int32[n,c] and cand: int32[n,k,c] (EMPTY-padded).
+
+    Each A/B row and each candidate tile is loaded into VMEM exactly once;
+    the A∩B membership vector and the first-occurrence dedupe masks are
+    computed per row tile and reused across all ``bk`` candidates — one
+    kernel launch instead of the five the unfused sequence needs
+    (pair + membership + 2× stack + triple).  Set semantics match
+    ``ref.fused_triple_stats`` bit-exactly, duplicates included.
+
+    VMEM per program instance: 3 row tiles of ``bn·c²`` bools (fa/fb/in_b
+    comparisons) plus 2 candidate tiles of ``bn·bk·c²`` bools; block_rows
+    auto-shrinks by ``2·bk + 3`` (candidate AND row tiles both count) so
+    the working set stays in budget."""
+    n, c = a.shape
+    k = cand.shape[1]
+    bk = min(block_k, k)
+    # clamp bk BEFORE sizing bn: a k=1 stack (count_triads_containing) has a
+    # bn·(2·1+3)·c² working set, not bn·(2·block_k+3)·c²
+    bn = min(block_rows or max(1, pick_block_rows(c) // (2 * bk + 3)), n)
+    grid = (pl.cdiv(n, bn), pl.cdiv(k, bk))
+    return pl.pallas_call(
+        _fused_stats_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, c), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, c), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, bk, c), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            # every j program writes the same iab row block — redundant but
+            # race-free (identical values), and it keeps the grid 2-D
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bn, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, bk), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n, k), jnp.int32),
+            jax.ShapeDtypeStruct((n, k), jnp.int32),
+            jax.ShapeDtypeStruct((n, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a, b, cand)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_rows", "block_k"))
@@ -145,15 +233,16 @@ def triple_intersect_count(
 ):
     """|A_i ∩ B_i ∩ C_ik|. a,b: int32[n,c]; cand: int32[n,k,c] -> int32[n,k].
 
-    The A∩B membership vector is computed once per row (by the membership
-    kernel) and re-used across all k candidates — the same factorisation the
-    paper uses when it scans h_k ∈ N(h_i) ∪ N(h_j) for a fixed (h_i, h_j).
+    The A∩B membership vector is computed once per row tile *inside* the
+    kernel and re-used across all k candidates — the same factorisation the
+    paper uses when it scans h_k ∈ N(h_i) ∪ N(h_j) for a fixed (h_i, h_j),
+    in ONE launch (membership is no longer a separate kernel).
     """
     n, c = a.shape
     k = cand.shape[1]
-    inb = membership(a, b, interpret=interpret)
-    bn = min(block_rows or max(1, pick_block_rows(c) // max(block_k, 1)), n)
     bk = min(block_k, k)
+    # bk candidate tiles + 1 in-kernel membership tile, all bn·c² bools
+    bn = min(block_rows or max(1, pick_block_rows(c) // (bk + 1)), n)
     grid = (pl.cdiv(n, bn), pl.cdiv(k, bk))
     return pl.pallas_call(
         _triple_count_kernel,
@@ -166,4 +255,4 @@ def triple_intersect_count(
         out_specs=pl.BlockSpec((bn, bk), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n, k), jnp.int32),
         interpret=interpret,
-    )(a, inb, cand)
+    )(a, b, cand)

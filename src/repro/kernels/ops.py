@@ -1,18 +1,38 @@
-"""Jit'd public wrappers around the Pallas kernels with an XLA fallback.
+"""Jit'd public wrappers around the intersection kernels, three backends.
 
 ``backend="pallas"`` runs the real kernels (interpret=True off-TPU, compiled
 Mosaic on TPU); ``backend="xla"`` uses the pure-jnp oracles — bit-identical
 semantics, used on CPU hosts where interpret-mode would be slow, and as the
 lowering path for the multi-pod dry-run (Mosaic kernels only lower for TPU
-targets).  Default is resolved once from the platform.
+targets); ``backend="bitset"`` packs rows to uint32 lane words and counts
+with ``popcount(x & y)`` (kernels/bitset.py) — it needs the universe bound
+``n_bits`` and wins in the high-cardinality regime.
+
+Backend selection (``resolve_backend``): an explicit string always wins;
+``None`` resolves to bitset when the caller supplies ``(c, n_bits)`` and the
+equality tile outweighs pack + word-stream work
+(``c² > PACK_COST·c + 2·ceil(n_bits/32)``), else to
+the platform default.  All three backends produce bit-identical triad
+histograms because the counting consumers only feed duplicate-free sorted
+rows (validated in tests/test_backend_parity.py).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import bitset as _bitset
 from repro.kernels import intersect as _pallas
 from repro.kernels import ref as _ref
+
+BACKENDS = ("pallas", "xla", "bitset")
+
+# Packing one row element (sort + scatter word build) costs about this many
+# equality-tile comparisons' worth of time — empirical, CPU XLA (see the
+# calibration table in DESIGN.md §2.5).  The bitset backend only wins once
+# the c² tile outweighs pack + word-stream work, which in practice means the
+# high-cardinality regime (c ≳ 128) over a dense-enough universe.
+PACK_COST = 100
 
 _DEFAULT = None
 
@@ -28,43 +48,119 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def resolve_backend(backend: str | None = None) -> str:
+def resolve_backend(
+    backend: str | None = None, *, c: int | None = None,
+    n_bits: int | None = None,
+) -> str:
     """Resolve ``backend`` to a concrete kernel choice, validating it.
 
     Callers that fix the dispatch once per computation — the sharded drivers
     in ``distributed/triads.py``, where every device of a ``shard_map`` body
     must lower the *same* kernel — resolve here, outside the sharded region,
-    and pass the concrete string down.  ``None`` resolves from the platform
-    exactly like the per-op wrappers below."""
-    b = backend or default_backend()
-    if b not in ("pallas", "xla"):
-        raise ValueError(f"unknown kernel backend {b!r}")
-    return b
+    and pass the concrete string down.
+
+    ``None`` auto-selects: when the static set width ``c`` and universe
+    bound ``n_bits`` are supplied and the equality tile outweighs the
+    bitset's pack + word-stream work —
+
+        c² > PACK_COST · c + 2 · ceil(n_bits/32)
+
+    — the bitset backend is chosen; otherwise the platform default (pallas
+    on TPU, xla elsewhere).  The cost rule is calibrated against CPU XLA,
+    so auto-bitset only applies where the default would be xla — on TPU the
+    fused Mosaic kernel is the measured-fast path and ``None`` keeps it
+    (force ``backend="bitset"`` explicitly to override).  Resolution is
+    idempotent: a concrete string passes through unchanged, so nested
+    resolves agree."""
+    if backend is None:
+        if (c is not None and n_bits is not None
+                and default_backend() != "pallas"
+                and c * c > PACK_COST * c + 2 * _bitset.bitset_words(n_bits)):
+            return "bitset"
+        return default_backend()
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown kernel backend {backend!r}")
+    return backend
 
 
-def pair_intersect_count(x, y, *, backend: str | None = None):
-    backend = backend or default_backend()
+def _require_n_bits(n_bits: int | None, op: str) -> int:
+    if n_bits is None:
+        raise ValueError(
+            f"backend='bitset' needs the universe bound n_bits for {op}")
+    return n_bits
+
+
+def pair_intersect_count(x, y, *, backend: str | None = None,
+                         n_bits: int | None = None,
+                         assume_sorted: bool = False):
+    backend = resolve_backend(backend, c=x.shape[-1], n_bits=n_bits)
     if backend == "pallas":
         return _pallas.pair_intersect_count(x, y, interpret=_interpret())
+    if backend == "bitset":
+        return _bitset.pair_intersect_count(
+            x, y, n_bits=_require_n_bits(n_bits, "pair_intersect_count"),
+            assume_sorted=assume_sorted)
     return _ref.pair_intersect_count(x, y)
 
 
 def membership(x, y, *, backend: str | None = None):
-    backend = backend or default_backend()
+    backend = resolve_backend(backend)
+    if backend == "bitset":
+        # no bitset lowering: the output is per-*element*, not a set size —
+        # fail loud rather than silently serving the xla result
+        raise ValueError("membership has no bitset lowering (per-element "
+                         "output); use backend='xla' or 'pallas'")
     if backend == "pallas":
         return _pallas.membership(x, y, interpret=_interpret())
     return _ref.membership(x, y)
 
 
-def triple_intersect_count(a, b, cand, *, backend: str | None = None):
-    backend = backend or default_backend()
+def triple_intersect_count(a, b, cand, *, backend: str | None = None,
+                           n_bits: int | None = None,
+                           assume_sorted: bool = False):
+    backend = resolve_backend(backend, c=a.shape[-1], n_bits=n_bits)
     if backend == "pallas":
         return _pallas.triple_intersect_count(a, b, cand, interpret=_interpret())
+    if backend == "bitset":
+        return _bitset.triple_intersect_count(
+            a, b, cand,
+            n_bits=_require_n_bits(n_bits, "triple_intersect_count"),
+            assume_sorted=assume_sorted)
     return _ref.triple_intersect_count(a, b, cand)
 
 
-def stack_pair_intersect_count(a, cand, *, backend: str | None = None):
-    backend = backend or default_backend()
+def stack_pair_intersect_count(a, cand, *, backend: str | None = None,
+                               n_bits: int | None = None,
+                               assume_sorted: bool = False):
+    backend = resolve_backend(backend, c=a.shape[-1], n_bits=n_bits)
     if backend == "pallas":
         return _pallas.stack_pair_intersect_count(a, cand, interpret=_interpret())
+    if backend == "bitset":
+        return _bitset.stack_pair_intersect_count(
+            a, cand,
+            n_bits=_require_n_bits(n_bits, "stack_pair_intersect_count"),
+            assume_sorted=assume_sorted)
     return _ref.stack_pair_intersect_count(a, cand)
+
+
+def fused_triple_stats(a, b, cand, *, backend: str | None = None,
+                       n_bits: int | None = None, assume_sorted: bool = False):
+    """One launch, all four joint intersection sizes of (A_i, B_i, C_ik):
+    ``(iab[n], iac[n,k], ibc[n,k], iabc[n,k])`` — the probe hot path.
+    True set semantics on every backend (duplicates count once).
+
+    ``n_bits`` (universe bound: vertex count for h2v rows, edge-slot count
+    for v2h rows) enables the bitset backend and, together with
+    ``c = a.shape[-1]``, drives auto-selection when ``backend`` is None.
+    ``assume_sorted=True`` promises rows are already sorted ascending
+    (read_sorted / dedupe_sorted output), letting the bitset packing skip
+    its sort — the O(c) adjacent-duplicate mask is kept, so repeated values
+    still collapse correctly.  The counting consumers all qualify."""
+    backend = resolve_backend(backend, c=a.shape[-1], n_bits=n_bits)
+    if backend == "pallas":
+        return _pallas.fused_triple_stats(a, b, cand, interpret=_interpret())
+    if backend == "bitset":
+        return _bitset.fused_triple_stats(
+            a, b, cand, n_bits=_require_n_bits(n_bits, "fused_triple_stats"),
+            assume_sorted=assume_sorted)
+    return _ref.fused_triple_stats(a, b, cand)

@@ -46,6 +46,44 @@ def triple_intersect_count(a, b, cand):
     return jnp.sum(in_c & (in_b[:, None, :] == 1), axis=2).astype(jnp.int32)
 
 
+def first_occurrence(x):
+    """Mask of the first occurrence of each distinct non-EMPTY value in each
+    row — the dedupe mask that gives the fused stats true *set* semantics
+    even on rows with repeated values. x: int32[n, c] -> bool[n, c]."""
+    c = x.shape[-1]
+    earlier = jnp.arange(c)[None, :] < jnp.arange(c)[:, None]   # [c, c] j < i
+    dup = jnp.any((x[:, :, None] == x[:, None, :]) & earlier, axis=2)
+    return ~dup & (x != EMPTY)
+
+
+def fused_triple_stats(a, b, cand):
+    """All four joint intersection sizes of the triple (A_i, B_i, C_ik) from
+    one pass over the three sets (the Venn-region statistics the triad
+    classifier consumes):
+
+        iab[n]    = |A_i ∩ B_i|
+        iac[n,k]  = |A_i ∩ C_ik|
+        ibc[n,k]  = |B_i ∩ C_ik|
+        iabc[n,k] = |A_i ∩ B_i ∩ C_ik|
+
+    Semantics are true *set* intersections: repeated values within a row
+    count once (first-occurrence masks), so the result is bit-identical to
+    the packed-bitset backend on any input.  On duplicate-free rows it
+    equals the unfused (pair/stack/triple) oracles above."""
+    fa = first_occurrence(a)                               # [n, c]
+    fb = first_occurrence(b)
+    in_b = (membership(a, b) == 1)                         # [n, c]
+    ab = in_b & fa
+    iab = jnp.sum(ab, axis=1).astype(jnp.int32)
+    cv = cand[:, :, None, :] != EMPTY
+    in_ca = jnp.any((a[:, None, :, None] == cand[:, :, None, :]) & cv, axis=3)
+    in_cb = jnp.any((b[:, None, :, None] == cand[:, :, None, :]) & cv, axis=3)
+    iac = jnp.sum(in_ca & fa[:, None, :], axis=2).astype(jnp.int32)
+    ibc = jnp.sum(in_cb & fb[:, None, :], axis=2).astype(jnp.int32)
+    iabc = jnp.sum(in_ca & ab[:, None, :], axis=2).astype(jnp.int32)
+    return iab, iac, ibc, iabc
+
+
 def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
                     window: int | None = None):
     """Reference attention. q,k,v: [b, h, s, d] (k/v may have fewer heads —

@@ -1,0 +1,145 @@
+"""End-to-end histogram parity across all three kernel backends
+(pallas / xla / bitset) for every counting driver: static counts, an
+Alg. 3 churn batch, and the streaming scan — plus the sharded twins.
+
+This is the contract the fused rewiring must preserve: the backend is an
+implementation detail, the triad histograms are bit-identical (the
+consumers only feed duplicate-free sorted rows, so the set-semantic fused
+stats agree with the historical unfused sequence exactly).
+
+Graphs are tiny on purpose: the pallas backend runs in interpret mode on
+CPU, which is orders of magnitude slower than compiled Mosaic — the point
+here is path coverage, not throughput (fig19 measures that).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as BL
+from repro.core import hypergraph as H
+from repro.core import motifs
+from repro.core import stream as S
+from repro.core import triads as T
+from repro.core import update as U
+from repro.core import vertex_triads as VT
+from repro.distributed import triads as DT
+from repro.hypergraph import generators as GEN
+
+BACKENDS = ("xla", "pallas", "bitset")
+V, MAXC, MAXD, MAXNB, MAXR, CHUNK = 16, 8, 16, 16, 63, 64
+EMPTY_PAD = jnp.iinfo(jnp.int32).max
+
+
+def _hg(n_edges=24, seed=0):
+    edges = GEN.random_hypergraph(n_edges, V, profile="coauth", max_card=6,
+                                  seed=seed, skew=0.3)
+    return H.from_lists(edges, num_vertices=V, max_edges=4 * n_edges,
+                        max_card=MAXC, slack=4.0)
+
+
+def _assert_all_equal(results):
+    ref = np.asarray(results["xla"])
+    for backend, got in results.items():
+        assert (np.asarray(got) == ref).all(), (
+            f"backend {backend} diverges: {np.asarray(got)} vs {ref}")
+
+
+@pytest.mark.parametrize("temporal", [False, True])
+def test_static_edge_parity(temporal):
+    hg = _hg()
+    reg, m = T.all_live_region(hg, MAXR)
+    times = jnp.arange(hg.n_edge_slots, dtype=jnp.int32) * 7 + 1
+    _assert_all_equal({
+        b: T.count_triads(hg, reg, m, max_deg=MAXD, chunk=CHUNK,
+                          temporal=temporal, times=times,
+                          window=40 if temporal else None, backend=b)
+        for b in BACKENDS})
+
+
+def test_static_vertex_parity():
+    hg = _hg()
+    vids = jnp.arange(V, dtype=jnp.int32)
+    mask = jnp.ones(V, bool)
+    _assert_all_equal({
+        b: VT.count_vertex_triads(hg, vids, mask, V, max_nb=MAXNB,
+                                  chunk=CHUNK, backend=b)
+        for b in BACKENDS})
+
+
+def test_churn_parity():
+    results = {}
+    for b in BACKENDS:
+        hg = _hg()
+        reg, m = T.all_live_region(hg, MAXR)
+        counts = T.count_triads(hg, reg, m, max_deg=MAXD, chunk=CHUNK,
+                                backend=b)
+        hg2, counts2, _ = U.update_triad_counts(
+            hg, counts,
+            jnp.array([1, 3]), jnp.array([True, True]),
+            jnp.array([[0, 2, 5, EMPTY_PAD, EMPTY_PAD, EMPTY_PAD, EMPTY_PAD,
+                        EMPTY_PAD]], jnp.int32),
+            jnp.array([3]), jnp.array([True]),
+            max_deg=MAXD, max_region=MAXR, chunk=CHUNK, backend=b)
+        results[b] = counts2
+    _assert_all_equal(results)
+
+
+def test_stream_parity():
+    events = GEN.event_stream(20, V, profile="coauth", insert_frac=0.7,
+                              seed=2, max_card=5, max_dt=2)
+    steps = S.plan_steps(events, 6)
+    results = {}
+    for b in BACKENDS:
+        hg = H.from_lists([], num_vertices=V, max_edges=64, max_card=MAXC,
+                          max_vdeg=32, min_capacity=4096)
+        log = S.log_from_events(events, max_card=MAXC)
+        st = S.make_stream(hg, log, jnp.zeros(motifs.NUM_CLASSES, jnp.int32))
+        st = S.run_stream(st, n_steps=steps, batch=6, mode="edge",
+                          max_deg=MAXD, max_region=MAXR, chunk=CHUNK,
+                          backend=b)
+        assert int(st.error) == 0
+        results[b] = st.counts
+    _assert_all_equal(results)
+
+
+def test_sharded_parity():
+    """Sharded twins agree with the single-device path for every backend on
+    whatever mesh this host offers (CI's distributed job widens it to 8)."""
+    mesh = DT.count_mesh(min(8, len(jax.devices())))
+    hg = _hg()
+    reg, m = T.all_live_region(hg, MAXR)
+    vids = jnp.arange(V, dtype=jnp.int32)
+    vmask = jnp.ones(V, bool)
+    for b in BACKENDS:
+        edge_ref = T.count_triads(hg, reg, m, max_deg=MAXD, chunk=CHUNK,
+                                  backend=b)
+        edge_got = DT.count_triads_sharded(hg, reg, m, mesh=mesh,
+                                           max_deg=MAXD, chunk=CHUNK,
+                                           backend=b)
+        assert (np.asarray(edge_got) == np.asarray(edge_ref)).all(), b
+        vert_ref = VT.count_vertex_triads(hg, vids, vmask, V, max_nb=MAXNB,
+                                          chunk=CHUNK, backend=b)
+        vert_got = DT.count_vertex_triads_sharded(
+            hg, vids, vmask, V, mesh=mesh, max_nb=MAXNB, chunk=CHUNK,
+            backend=b)
+        assert (np.asarray(vert_got) == np.asarray(vert_ref)).all(), b
+
+
+def test_auto_backend_matches_explicit(monkeypatch):
+    """backend=None (auto-selection) must be histogram-identical to every
+    explicit choice — selection is a perf knob, never a semantics knob.
+
+    At test sizes the cost rule never flips (c=8 < PACK_COST), so force it:
+    with PACK_COST=0 the auto path genuinely resolves to bitset and the
+    histogram must still match xla.  A distinct ``chunk`` guards against
+    reusing the jit trace cached under the un-patched rule."""
+    from repro.kernels import ops as kops
+
+    hg = _hg(seed=5)
+    reg, m = T.all_live_region(hg, MAXR)
+    ref = T.count_triads(hg, reg, m, max_deg=MAXD, chunk=48, backend="xla")
+    monkeypatch.setattr(kops, "PACK_COST", 0)
+    assert kops.resolve_backend(None, c=MAXC, n_bits=V) == "bitset"
+    auto = T.count_triads(hg, reg, m, max_deg=MAXD, chunk=48)
+    assert (np.asarray(auto) == np.asarray(ref)).all()

@@ -1,0 +1,236 @@
+"""Fused one-pass multi-intersection kernel + packed-bitset backend vs the
+kernels/ref.py oracles, on adversarial inputs: all-EMPTY rows, duplicate
+values within rows, widths that are not a multiple of 128, and k=1 stacks.
+
+Two layers:
+  * parametrized sweeps that always run (no optional deps);
+  * hypothesis property tests (skipped when hypothesis is absent, like
+    test_hypergraph_property.py) that fuzz shapes/values/duplication.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import bitset as BS
+from repro.kernels import intersect as K
+from repro.kernels import ops as kops
+from repro.kernels import ref as R
+
+EMPTY = np.iinfo(np.int32).max
+
+BACKENDS = ("pallas", "xla", "bitset")
+
+
+def mksets(rng, n, c, univ, dup_frac=0.0):
+    """EMPTY-padded rows over [0, univ); a dup_frac share of rows contain
+    repeated values (the adversarial case the first-occurrence masks cover)."""
+    out = np.full((n, c), EMPTY, np.int32)
+    for i in range(n):
+        dups = rng.random() < dup_frac
+        hi = c + 1 if dups else min(c, univ) + 1
+        k = int(rng.integers(0, hi))
+        if k:
+            out[i, :k] = np.sort(rng.choice(univ, size=k, replace=dups))
+    return jnp.asarray(out)
+
+
+def assert_fused_matches(a, b, cand, n_bits):
+    exp = R.fused_triple_stats(a, b, cand)
+    for backend in BACKENDS:
+        got = kops.fused_triple_stats(a, b, cand, backend=backend,
+                                      n_bits=n_bits)
+        for name, g, e in zip(("iab", "iac", "ibc", "iabc"), got, exp):
+            assert (np.asarray(g) == np.asarray(e)).all(), (backend, name)
+
+
+@pytest.mark.parametrize("n,k,c,univ", [
+    (1, 1, 8, 40),        # k=1
+    (7, 3, 16, 33),       # universe not a multiple of 32
+    (5, 4, 100, 64),      # c not a multiple of 128 (or of anything)
+    (9, 2, 130, 300),     # c > 128, still not lane-aligned
+    (3, 5, 8, 1),         # single-value universe: maximal overlap
+])
+@pytest.mark.parametrize("dup_frac", [0.0, 0.7])
+def test_fused_triple_stats_sweep(n, k, c, univ, dup_frac):
+    rng = np.random.default_rng(n * 1000 + k * 100 + c + int(dup_frac * 10))
+    a = mksets(rng, n, c, univ, dup_frac)
+    b = mksets(rng, n, c, univ, dup_frac)
+    cand = jnp.stack([mksets(rng, k, c, univ, dup_frac) for _ in range(n)])
+    assert_fused_matches(a, b, cand, univ)
+
+
+def test_all_empty_rows():
+    a = jnp.full((4, 16), EMPTY, jnp.int32)
+    cand = jnp.full((4, 2, 16), EMPTY, jnp.int32)
+    for backend in BACKENDS:
+        got = kops.fused_triple_stats(a, a, cand, backend=backend, n_bits=50)
+        assert all(int(np.asarray(g).sum()) == 0 for g in got)
+
+
+def test_fused_equals_unfused_on_duplicate_free_rows():
+    """On set-semantic rows (what every counting consumer feeds) the fused
+    stats equal the historical unfused oracle sequence exactly — this is the
+    invariant that makes the rewiring histogram-preserving."""
+    rng = np.random.default_rng(7)
+    a, b = mksets(rng, 11, 24, 60), mksets(rng, 11, 24, 60)
+    cand = jnp.stack([mksets(rng, 5, 24, 60) for _ in range(11)])
+    iab, iac, ibc, iabc = R.fused_triple_stats(a, b, cand)
+    assert (np.asarray(iab) == np.asarray(R.pair_intersect_count(a, b))).all()
+    assert (np.asarray(iac) ==
+            np.asarray(R.stack_pair_intersect_count(a, cand))).all()
+    assert (np.asarray(ibc) ==
+            np.asarray(R.stack_pair_intersect_count(b, cand))).all()
+    assert (np.asarray(iabc) ==
+            np.asarray(R.triple_intersect_count(a, b, cand))).all()
+
+
+def test_pallas_fused_respects_small_blocks():
+    """Force multi-program grids (block_rows=2, block_k=2) so the BlockSpec
+    index maps and the redundant iab writes are actually exercised."""
+    rng = np.random.default_rng(3)
+    a, b = mksets(rng, 9, 16, 30), mksets(rng, 9, 16, 30)
+    cand = jnp.stack([mksets(rng, 5, 16, 30) for _ in range(9)])
+    got = K.fused_triple_stats(a, b, cand, block_rows=2, block_k=2)
+    exp = R.fused_triple_stats(a, b, cand)
+    for g, e in zip(got, exp):
+        assert (np.asarray(g) == np.asarray(e)).all()
+
+
+# ------------------------------------------------------------------ bitset
+@pytest.mark.parametrize("n_bits", [1, 31, 32, 33, 100, 1000])
+def test_pack_bitset_roundtrip(n_bits):
+    rng = np.random.default_rng(n_bits)
+    x = mksets(rng, 6, 12, n_bits, dup_frac=0.5)
+    packed = BS.pack_bitset(x, n_bits)
+    assert packed.shape == (6, BS.bitset_words(n_bits))
+    xs = np.asarray(x)
+    for i in range(6):
+        want = {v for v in xs[i] if v != EMPTY}
+        got = {w * 32 + t for w in range(packed.shape[1])
+               for t in range(32) if (int(packed[i, w]) >> t) & 1}
+        assert got == want
+
+
+def test_pack_bitset_drops_out_of_universe():
+    # values >= n_bits cannot be represented; they must vanish, not alias
+    x = jnp.asarray([[0, 31, 32, 33, EMPTY]], jnp.int32)
+    packed = BS.pack_bitset(x, 33)     # W=2; 33 would alias bit 1 of word 1
+    assert int(packed[0, 0]) == (1 << 0) | (1 << 31)
+    assert int(packed[0, 1]) == 1      # bit 32 (the last in-universe value)
+
+
+def test_pack_bitset_assume_sorted_fast_path():
+    """assume_sorted=True must agree with the general path on sorted rows
+    (what read_sorted / dedupe_sorted feed the counting consumers) —
+    including sorted rows with adjacent duplicates, since nothing in the
+    insert path enforces duplicate-free user edges."""
+    rng = np.random.default_rng(21)
+    x = mksets(rng, 7, 12, 50)                  # sorted, duplicate-free
+    general = BS.pack_bitset(x, 50)
+    fast = BS.pack_bitset(x, 50, assume_sorted=True)
+    assert (np.asarray(general) == np.asarray(fast)).all()
+    dup = jnp.asarray([[3, 3, 5, EMPTY]], jnp.int32)   # sorted, duplicated
+    assert (np.asarray(BS.pack_bitset(dup, 40, assume_sorted=True)) ==
+            np.asarray(BS.pack_bitset(dup, 40))).all()
+    assert int(BS.pack_bitset(dup, 40, assume_sorted=True)[0, 0]) == (
+        (1 << 3) | (1 << 5))
+    a, b = mksets(rng, 5, 10, 40), mksets(rng, 5, 10, 40)
+    cand = jnp.stack([mksets(rng, 3, 10, 40) for _ in range(5)])
+    exp = R.fused_triple_stats(a, b, cand)
+    got = BS.fused_triple_stats(a, b, cand, n_bits=40, assume_sorted=True)
+    for g, e in zip(got, exp):
+        assert (np.asarray(g) == np.asarray(e)).all()
+
+
+def test_bitset_unfused_ops_match_ref():
+    rng = np.random.default_rng(11)
+    a, b = mksets(rng, 8, 10, 40), mksets(rng, 8, 10, 40)
+    cand = jnp.stack([mksets(rng, 3, 10, 40) for _ in range(8)])
+    assert (np.asarray(BS.pair_intersect_count(a, b, n_bits=40)) ==
+            np.asarray(R.pair_intersect_count(a, b))).all()
+    assert (np.asarray(BS.stack_pair_intersect_count(a, cand, n_bits=40)) ==
+            np.asarray(R.stack_pair_intersect_count(a, cand))).all()
+    assert (np.asarray(BS.triple_intersect_count(a, b, cand, n_bits=40)) ==
+            np.asarray(R.triple_intersect_count(a, b, cand))).all()
+
+
+# ------------------------------------------------------------ backend rules
+def test_resolve_backend_rules():
+    assert kops.resolve_backend("pallas") == "pallas"
+    assert kops.resolve_backend("bitset") == "bitset"
+    # auto: tile must outweigh pack + words (PACK_COST model)
+    assert kops.resolve_backend(None, c=256, n_bits=8192) == "bitset"
+    assert kops.resolve_backend(None, c=8, n_bits=32) != "bitset"
+    assert kops.resolve_backend(None, c=128, n_bits=1 << 20) != "bitset"
+    # idempotent: a concrete choice survives nested resolves
+    assert kops.resolve_backend(
+        kops.resolve_backend(None, c=256, n_bits=8192),
+        c=8, n_bits=1 << 20) == "bitset"
+    with pytest.raises(ValueError):
+        kops.resolve_backend("cuda")
+
+
+def test_bitset_requires_n_bits():
+    a = jnp.zeros((2, 4), jnp.int32)
+    cand = jnp.zeros((2, 1, 4), jnp.int32)
+    with pytest.raises(ValueError, match="n_bits"):
+        kops.fused_triple_stats(a, a, cand, backend="bitset")
+
+
+def test_membership_rejects_bitset():
+    # per-element output has no bitset lowering — must fail loud, not
+    # silently serve the xla result
+    a = jnp.zeros((2, 4), jnp.int32)
+    with pytest.raises(ValueError, match="bitset"):
+        kops.membership(a, a, backend="bitset")
+
+
+# ------------------------------------------------------------- hypothesis
+# guarded import (NOT module-level importorskip: that would skip the
+# deterministic sweeps above too when hypothesis is absent)
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def fused_case(draw):
+        n = draw(st.integers(1, 6))
+        k = draw(st.integers(1, 4))
+        c = draw(st.integers(1, 20))
+        univ = draw(st.integers(1, 70))
+        rows = draw(st.lists(
+            st.lists(st.integers(0, univ - 1) | st.just(EMPTY),
+                     min_size=c, max_size=c),
+            min_size=n * (k + 2), max_size=n * (k + 2)))
+        arr = np.asarray(rows, np.int32).reshape(n, k + 2, c)
+        return (jnp.asarray(arr[:, 0]), jnp.asarray(arr[:, 1]),
+                jnp.asarray(arr[:, 2:]), univ)
+
+    @settings(max_examples=40, deadline=None)
+    @given(fused_case())
+    def test_fused_property(case):
+        a, b, cand, univ = case
+        assert_fused_matches(a, b, cand, univ)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(1, 200), st.data())
+    def test_pack_bitset_property(n_bits, data):
+        c = data.draw(st.integers(1, 16))
+        vals = data.draw(st.lists(
+            st.integers(0, n_bits - 1) | st.just(EMPTY),
+            min_size=c, max_size=c))
+        x = jnp.asarray([vals], jnp.int32)
+        packed = np.asarray(BS.pack_bitset(x, n_bits))[0]
+        want = {v for v in vals if v != EMPTY}
+        got = {w * 32 + t for w in range(len(packed))
+               for t in range(32) if (int(packed[w]) >> t) & 1}
+        assert got == want
+else:
+    def test_fused_property():
+        pytest.skip("hypothesis not installed")
+
+    def test_pack_bitset_property():
+        pytest.skip("hypothesis not installed")
