@@ -368,6 +368,97 @@ def fig19_fused_kernel():
     return out
 
 
+# ------------------------------------------------------------------ Fig 20
+QUERY_BENCH: list[dict] = []    # machine-readable rows; run.py dumps them
+                                # to BENCH_query.json next to the CSV
+
+
+def fig20_query_throughput():
+    """Triad query service (src/repro/query/, DESIGN.md §7): per-edge point
+    queries served three ways at several batch sizes —
+
+      * sequential: one ``count_triads_containing`` jit dispatch per query
+        (the pre-subsystem alternative: N launches, each re-deriving its
+        neighbour rows, each padding its own work-list);
+      * batched: ONE ``count_triads_containing_each`` call against the
+        epoch-level neighbour index — the N probe work-lists concatenate,
+        validity-compact, and share padded chunk launches; the index
+        (``triads.neighbor_table``, built once per epoch, cost reported as
+        ``us_index_build``) turns work-list derivation into gathers;
+      * cold / warm cache: the full ``query.serve`` path with an empty vs
+        a pre-filled ``QueryCache`` (steady-state localized-churn traffic
+        answers from host lookups).
+
+    The acceptance line is the batched vs sequential ratio at batch ≥ 64;
+    warm-cache hits are reported separately."""
+    from repro.core import triads as T
+    from repro import query
+
+    hg, nv = build("coauth", 1500)
+    present = np.asarray(hg.h2v.mgr.present)
+    live = np.asarray(hg.h2v.mgr.hid)[present == 1]
+    rng = np.random.default_rng(20)
+    snap = query.of_graph(hg)
+    out = []
+
+    us_index, table = timeit(T.neighbor_table, hg, max_deg=MAXD)
+
+    for B in (16, 64, 128):
+        ranks = jnp.asarray(rng.choice(live, B, replace=False).astype(np.int32))
+        mask = jnp.ones(B, bool)
+
+        def sequential(ranks):
+            one = jnp.ones(1, bool)
+            return jnp.stack([
+                T.count_triads_containing(hg, ranks[i: i + 1], one,
+                                          max_deg=MAXD, chunk=CHUNK)
+                for i in range(B)])
+
+        def batched(ranks, mask):
+            return T.count_triads_containing_each(
+                hg, ranks, mask, max_deg=MAXD, chunk=CHUNK,
+                nbrs_table=table)
+
+        us_seq, ref = timeit(sequential, ranks)
+        us_bat, got = timeit(batched, ranks, mask)
+        assert (np.asarray(got) == np.asarray(ref)).all()
+
+        reqs = [query.triads_containing_edge(int(r)) for r in ranks]
+        serve_kw = dict(max_deg=MAXD, chunk=CHUNK, max_region=MAXR)
+
+        def serve_cold(reqs):
+            # a fresh cache: pays the index build + the batched lowering,
+            # i.e. the first traffic to arrive at a new epoch
+            return query.serve(snap, reqs, cache=query.QueryCache(),
+                               **serve_kw)
+
+        warm = query.QueryCache()
+        query.serve(snap, reqs, cache=warm, **serve_kw)   # prefill
+
+        def serve_warm(reqs):
+            return query.serve(snap, reqs, cache=warm, **serve_kw)
+
+        us_cold, _ = timeit(serve_cold, reqs)
+        us_warm, _ = timeit(serve_warm, reqs)
+
+        QUERY_BENCH.append({
+            "batch": B,
+            "us_sequential": round(us_seq, 1),
+            "us_batched": round(us_bat, 1),
+            "us_index_build": round(us_index, 1),
+            "us_serve_cold": round(us_cold, 1),
+            "us_serve_warm": round(us_warm, 1),
+            "speedup_batched_vs_sequential": round(us_seq / us_bat, 2),
+            "speedup_warm_vs_cold": round(us_cold / us_warm, 2),
+            "warm_us_per_query": round(us_warm / B, 2),
+        })
+        # "batched=" not "speedup=": table4 aggregates paper-speedup rows only
+        out.append(row(f"fig20/batch={B}", us_bat,
+                       f"batched_vs_sequential={us_seq / us_bat:.1f}x;"
+                       f"warm_cache_vs_cold={us_cold / us_warm:.1f}x"))
+    return out
+
+
 # ------------------------------------------------------------------ Table IV
 def table4_summary(rows: list[str]) -> list[str]:
     import re
@@ -382,4 +473,4 @@ def table4_summary(rows: list[str]) -> list[str]:
 ALL = [fig6a_batch_size, fig6b_scale, fig6c_cardinality, fig6d_vertex_mods,
        fig7_9_mochy, fig10_mochy_gpu, fig11_stathyper, fig12_15_thyme,
        fig16_hornet, fig17_streaming, fig18_sharded_scaling,
-       fig19_fused_kernel]
+       fig19_fused_kernel, fig20_query_throughput]

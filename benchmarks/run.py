@@ -1,7 +1,8 @@
 """Benchmark runner — one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV.  Kernel-level figures additionally
-dump machine-readable ``BENCH_kernels.json`` next to the CSV, so the perf
-trajectory of the probe hot path is tracked across PRs.
+Prints ``name,us_per_call,derived`` CSV.  Machine-readable figures
+additionally dump JSON next to the CSV — ``BENCH_kernels.json`` (fig19,
+the probe hot path) and ``BENCH_query.json`` (fig20, the query service) —
+so their perf trajectories are tracked across PRs.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig19]
 """
@@ -36,13 +37,15 @@ def main() -> None:
         print(f"# {fn.__name__} done in {time.time() - t0:.1f}s", file=sys.stderr)
     for r in figures.table4_summary(all_rows):
         print(r)
-    if figures.KERNEL_BENCH:
-        with open("BENCH_kernels.json", "w") as f:
-            json.dump({"figure": "fig19_fused_kernel",
-                       "unit": "us_per_call",
-                       "points": figures.KERNEL_BENCH}, f, indent=2)
-        print("# wrote BENCH_kernels.json "
-              f"({len(figures.KERNEL_BENCH)} points)", file=sys.stderr)
+    for path, figure, points in (
+        ("BENCH_kernels.json", "fig19_fused_kernel", figures.KERNEL_BENCH),
+        ("BENCH_query.json", "fig20_query_throughput", figures.QUERY_BENCH),
+    ):
+        if points:
+            with open(path, "w") as f:
+                json.dump({"figure": figure, "unit": "us_per_call",
+                           "points": points}, f, indent=2)
+            print(f"# wrote {path} ({len(points)} points)", file=sys.stderr)
 
 
 if __name__ == "__main__":

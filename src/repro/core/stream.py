@@ -184,6 +184,18 @@ class StreamState:
     live_t: jax.Array   # int32[C] log slot -> timestamp of live insert
     t_now: jax.Array    # int32 scalar — stream clock (max event time seen)
     error: jax.Array    # int32 scalar — sticky
+    # --- epoch / dirty bookkeeping (query service, DESIGN.md §7) ---------
+    # epoch counts applied scheduler steps; the dirty maps record, per
+    # hyperedge rank / vertex id, the LAST epoch whose batch may have
+    # changed its triad participation (the union affected regions that
+    # update.churn_step / vertex_churn_step now return instead of
+    # dropping).  A cached per-edge answer from epoch E is valid at a later
+    # snapshot iff dirty_epoch[rank] <= E; the slots dirtied by the most
+    # recent batch alone are exactly ``dirty_epoch == epoch``
+    # (observability: "what did the last batch touch?").
+    epoch: jax.Array          # int32 scalar — applied scheduler steps
+    dirty_epoch: jax.Array    # int32[n_edge_slots] by hyperedge rank
+    v_dirty_epoch: jax.Array  # int32[num_vertices] by vertex id
 
 
 def make_stream(hg: Hypergraph, log: EventLog, counts, *, times=None) -> StreamState:
@@ -200,6 +212,9 @@ def make_stream(hg: Hypergraph, log: EventLog, counts, *, times=None) -> StreamS
         rank_of=jnp.full(C, EMPTY, jnp.int32),
         live_t=jnp.full(C, EMPTY, jnp.int32),
         t_now=jnp.int32(_I32_MIN), error=jnp.int32(0),
+        epoch=jnp.int32(0),
+        dirty_epoch=jnp.zeros(hg.n_edge_slots, jnp.int32),
+        v_dirty_epoch=jnp.zeros(hg.num_vertices, jnp.int32),
     )
 
 
@@ -214,7 +229,7 @@ def _dedupe_earliest(slots: jax.Array, ok: jax.Array):
 
 def _stream_step(
     state: StreamState, *, batch, mode, max_deg, max_nb, max_region, chunk,
-    window, expiry, v_total, backend, mesh,
+    window, expiry, v_total, backend, mesh, track_dirty,
 ):
     C = state.log.capacity
     head0 = state.log.head
@@ -263,19 +278,82 @@ def _stream_step(
     ins_times = jnp.where(ins_ok, t, 0)
 
     if mode == "vertex":
-        hg, counts, new_ranks = U.vertex_churn_step(
+        hg, counts, new_ranks, (vreg, vm) = U.vertex_churn_step(
             state.hg, state.counts, v_total, all_del, all_del_mask,
             ins_lists, ins_cards, ins_ok,
             max_nb=max_nb, max_region=max_region, chunk=chunk,
             backend=backend, mesh=mesh)
         times = state.times
+        if track_dirty:
+            # the edge-family dirty set is not a by-product of this mode's
+            # counting — derive it from the batch seeds (old graph for the
+            # delete side, new graph for the inserts)
+            erd, emd = U.affected_edges(state.hg, all_del, all_del_mask,
+                                        max_deg=max_deg,
+                                        max_region=max_region)
+            eri, emi = U.affected_edges(hg, new_ranks, ins_ok,
+                                        max_deg=max_deg,
+                                        max_region=max_region)
+            ereg = jnp.concatenate([erd, eri])
+            em = jnp.concatenate([emd, emi])
+            e_sat = jnp.all(emd) | jnp.all(emi)
+        v_sat = jnp.all(vm)
     else:
-        hg, counts, times, new_ranks = U.churn_step(
+        hg, counts, times, new_ranks, (ereg, em) = U.churn_step(
             state.hg, state.counts, all_del, all_del_mask,
             ins_lists, ins_cards, ins_ok,
             max_deg=max_deg, max_region=max_region, chunk=chunk,
             temporal=(mode == "temporal"), times=state.times,
             ins_times=ins_times, window=window, backend=backend, mesh=mesh)
+        if track_dirty:
+            # dual of the vertex-mode case: the vertex-family dirty set
+            # (the 1-hop vertex closure of the batch — DESIGN.md §3)
+            vrd, vmd = U.affected_vertices(state.hg, all_del, all_del_mask,
+                                           max_nb=max_nb,
+                                           max_region=max_region)
+            vri, vmi = U.affected_vertices(hg, new_ranks, ins_ok,
+                                           max_nb=max_nb,
+                                           max_region=max_region)
+            vreg = jnp.concatenate([vrd, vri])
+            vm = jnp.concatenate([vmd, vmi])
+            v_sat = jnp.all(vmd) | jnp.all(vmi)
+        e_sat = jnp.all(em)
+
+    # Dirty-map maintenance.  The counted family's region is a free
+    # by-product; the other family's closure is only derived when
+    # track_dirty (pure-ingest workloads skip it).  A closure that
+    # saturates its max_region bound may have been truncated
+    # (update._dedupe_pad keeps a prefix silently), so saturation
+    # conservatively dirties the whole map — the cache rule stays exact,
+    # never optimistic.  With track_dirty=False the derived family is
+    # simply always-dirty (whole-map bump each step).
+    epoch = state.epoch + 1
+    n_slots = state.hg.n_edge_slots
+    nv = state.hg.num_vertices
+    if mode == "vertex":
+        v_dirty_epoch = state.v_dirty_epoch.at[
+            jnp.where(vm, jnp.minimum(vreg, nv), nv)
+        ].set(epoch, mode="drop")
+        v_dirty_epoch = jnp.where(v_sat, epoch, v_dirty_epoch)
+        if track_dirty:
+            dirty_epoch = state.dirty_epoch.at[
+                jnp.where(em, jnp.minimum(ereg, n_slots), n_slots)
+            ].set(epoch, mode="drop")
+            dirty_epoch = jnp.where(e_sat, epoch, dirty_epoch)
+        else:
+            dirty_epoch = jnp.full_like(state.dirty_epoch, epoch)
+    else:
+        dirty_epoch = state.dirty_epoch.at[
+            jnp.where(em, jnp.minimum(ereg, n_slots), n_slots)
+        ].set(epoch, mode="drop")
+        dirty_epoch = jnp.where(e_sat, epoch, dirty_epoch)
+        if track_dirty:
+            v_dirty_epoch = state.v_dirty_epoch.at[
+                jnp.where(vm, jnp.minimum(vreg, nv), nv)
+            ].set(epoch, mode="drop")
+            v_dirty_epoch = jnp.where(v_sat, epoch, v_dirty_epoch)
+        else:
+            v_dirty_epoch = jnp.full_like(state.v_dirty_epoch, epoch)
 
     # slot -> (rank, time) bookkeeping: clear deletions/expiries, then record
     # this batch's inserts (an insert reusing a just-freed slot wins)
@@ -299,14 +377,15 @@ def _stream_step(
              | collide.astype(jnp.int32))
     return StreamState(hg=hg, counts=counts, times=times, log=log,
                        rank_of=rank_of, live_t=live_t, t_now=t_now,
-                       error=error)
+                       error=error, epoch=epoch, dirty_epoch=dirty_epoch,
+                       v_dirty_epoch=v_dirty_epoch)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("n_steps", "batch", "mode", "max_deg", "max_nb",
                      "max_region", "chunk", "window", "expiry", "backend",
-                     "mesh"),
+                     "mesh", "track_dirty"),
 )
 def run_stream(
     state: StreamState,
@@ -323,6 +402,11 @@ def run_stream(
     v_total: jax.Array | int = 0,
     backend: str | None = None,
     mesh=None,                   # jax.sharding.Mesh | None — sharded counts
+    track_dirty: bool = True,    # maintain BOTH dirty maps exactly (§7.2);
+                                 # False: skip the derived-family closure
+                                 # (pure-ingest speed) — that map then
+                                 # bumps wholesale every step, so its
+                                 # point queries never cache across epochs
 ) -> StreamState:
     """Scan ``n_steps`` scheduler batches through the Alg. 3 core.  One XLA
     computation end to end; counts stay exact after every step (validated in
@@ -333,7 +417,15 @@ def run_stream(
     ``backend`` reaches the fused probe kernel through the shared chunk
     lowerings (``"pallas"``/``"xla"``/``"bitset"``, or None to auto-select
     — kernels/ops.resolve_backend); histograms are backend-invariant
-    (tests/test_backend_parity.py)."""
+    (tests/test_backend_parity.py).
+
+    Dirty-map caveat: the maps inherit the repo-wide bound contract —
+    per-row neighbourhoods truncate silently past ``max_deg``/``max_nb``
+    (docs/API.md), so BOTH bounds must be sized from your data even in
+    modes that only count one family (vertex mode derives its edge dirty
+    map through ``max_deg``; edge/temporal modes derive the vertex map
+    through ``max_nb``).  Region-level saturation, by contrast, is
+    detected and dirties conservatively."""
     if mode not in ("edge", "temporal", "vertex"):
         raise ValueError(f"unknown mode {mode!r}")
     if batch > state.log.capacity:
@@ -345,7 +437,8 @@ def run_stream(
         s = _stream_step(
             s, batch=batch, mode=mode, max_deg=max_deg, max_nb=max_nb,
             max_region=max_region, chunk=chunk, window=window, expiry=expiry,
-            v_total=v_total, backend=backend, mesh=mesh)
+            v_total=v_total, backend=backend, mesh=mesh,
+            track_dirty=track_dirty)
         return s, None
 
     state, _ = jax.lax.scan(body, state, None, length=n_steps)

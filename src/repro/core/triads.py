@@ -121,29 +121,21 @@ def pad_pairs(a, b, ok, multiple: int):
     return a, b, ok
 
 
-def chunk_counter(
-    hg: Hypergraph, nbrs, row_of, bitmap, t_by_rank, *,
-    chunk: int, temporal: bool, window, backend,
-):
-    """Per-chunk probe kernel: ``(a, b, ok)`` int32[chunk] triples -> raw
-    weighted class histogram (open triples ×3, closed ×2; divide the summed
-    histogram by 6).  Factored out of ``count_triads`` so the sharded driver
-    runs the identical kernel on its local slice of the pair list.
+def chunk_probe_stats(hg: Hypergraph, nbrs, row_of, bitmap, *, chunk: int,
+                      backend: str):
+    """Candidate expansion + ONE fused kernel launch for a probe chunk —
+    the shared hot path under ``chunk_counter`` (histograms) and
+    ``query/topk.py`` (top-k triplet scoring).  ``backend`` must already be
+    resolved (``kops.resolve_backend``).
 
-    The intersection hot spot is ONE fused kernel launch per chunk
-    (``kops.fused_triple_stats``): the A/B/Cs tiles stream from HBM once and
-    all four joint sizes (iab, iac, ibc, iabc) come out of the same pass —
-    previously five launches (pair + membership + 2× stack + triple) each
-    re-reading the rows.  ``backend`` resolves here (bitset auto-selected
-    for high-cardinality edges over dense universes — the
-    ``kops.resolve_backend`` cost rule, DESIGN.md §2.5)."""
+    Returns a function ``(a, b) -> (cand, (iab, iac, ibc, iabc),
+    (ca, cb, cc))`` where ``cand`` is the deduplicated, region-restricted
+    third-edge stack ``int32[chunk, K]`` and the stats follow
+    ``kops.fused_triple_stats`` shapes."""
     n_slots = hg.n_edge_slots
-    n_out = motifs.NUM_TEMPORAL if temporal else motifs.NUM_CLASSES
     n_bits = hg.num_vertices
-    backend = kops.resolve_backend(backend, c=hg.h2v.max_card, n_bits=n_bits)
 
-    def one_chunk(args):
-        a, b, ok = args
+    def stats(a, b):
         na = nbrs[row_of[jnp.minimum(a, n_slots)]]        # precomputed rows
         nb = nbrs[row_of[jnp.minimum(b, n_slots)]]
         cand = jnp.concatenate([na, nb], axis=1)          # [chunk, 2D]
@@ -168,6 +160,38 @@ def chunk_counter(
         # (rows are read_sorted / dedupe_sorted output -> already sorted)
         iab, iac, ibc, iabc = kops.fused_triple_stats(
             A, B, Cs, backend=backend, n_bits=n_bits, assume_sorted=True)
+        return cand, (iab, iac, ibc, iabc), (ca, cb, cc)
+
+    return stats
+
+
+def chunk_counter(
+    hg: Hypergraph, nbrs, row_of, bitmap, t_by_rank, *,
+    chunk: int, temporal: bool, window, backend,
+):
+    """Per-chunk probe kernel: ``(a, b, ok)`` int32[chunk] triples -> raw
+    weighted class histogram (open triples ×3, closed ×2; divide the summed
+    histogram by 6).  Factored out of ``count_triads`` so the sharded driver
+    runs the identical kernel on its local slice of the pair list.
+
+    The intersection hot spot is ONE fused kernel launch per chunk
+    (``kops.fused_triple_stats`` via ``chunk_probe_stats``): the A/B/Cs
+    tiles stream from HBM once and all four joint sizes (iab, iac, ibc,
+    iabc) come out of the same pass — previously five launches (pair +
+    membership + 2× stack + triple) each re-reading the rows.  ``backend``
+    resolves here (bitset auto-selected for high-cardinality edges over
+    dense universes — the ``kops.resolve_backend`` cost rule,
+    DESIGN.md §2.5)."""
+    n_out = motifs.NUM_TEMPORAL if temporal else motifs.NUM_CLASSES
+    backend = kops.resolve_backend(
+        backend, c=hg.h2v.max_card, n_bits=hg.num_vertices)
+    stats = chunk_probe_stats(hg, nbrs, row_of, bitmap, chunk=chunk,
+                              backend=backend)
+
+    def one_chunk(args):
+        a, b, ok = args
+        cand, (iab, iac, ibc, iabc), (ca, cb, cc) = stats(a, b)
+        c_safe = jnp.where(cand == EMPTY, 0, cand)
 
         valid = ok[:, None] & (cand != EMPTY)
         if temporal:
@@ -248,54 +272,78 @@ def count_triads(
     return jnp.sum(hists, axis=0) // 6
 
 
-@functools.partial(
-    jax.jit, static_argnames=("max_deg", "chunk", "temporal", "backend"))
-def count_triads_containing(
-    hg: Hypergraph,
-    changed: jax.Array,      # int32[M] changed hyperedge ranks
-    mask: jax.Array,         # bool[M]
-    *,
-    max_deg: int,
-    chunk: int = 1024,
-    temporal: bool = False,
-    times: jax.Array | None = None,
-    window: int | None = None,
-    backend: str | None = None,
-):
-    """Histogram of triads that CONTAIN ≥1 changed hyperedge (each triple
-    counted once — §Perf iteration E2, and arguably the literal reading of
-    the paper's Alg. 3 steps 2/5).
+@functools.partial(jax.jit, static_argnames=("max_deg", "block"))
+def neighbor_table(hg: Hypergraph, *, max_deg: int, block: int = 1024):
+    """Line-graph rows for EVERY edge slot: ``int32[n_slots + 1, max_deg]``
+    (row ``n_slots`` is the all-EMPTY sentinel; dead slots come out empty
+    exactly as per-call ``neighbors`` would).  The query service builds
+    this once per snapshot epoch and amortises it across all point-query
+    traffic at that epoch (DESIGN.md §7): the per-call h2v∘v2h expansion +
+    dedupe-sort is the dominant cost of a containing-triple work-list, and
+    a table row is a gather.  Built in ``block``-sized strips via
+    ``lax.map`` to bound the expansion's working set."""
+    n_slots = hg.n_edge_slots
+    n_pad = -(-n_slots // block) * block
+    ranks = jnp.minimum(jnp.arange(n_pad, dtype=jnp.int32), n_slots - 1)
+    rows = jax.lax.map(
+        lambda r: neighbors(hg, r, max_deg), ranks.reshape(-1, block))
+    rows = rows.reshape(n_pad, -1)[:n_slots]
+    return jnp.concatenate(
+        [rows, jnp.full((1, rows.shape[1]), EMPTY, jnp.int32)])
 
-    Enumeration per changed edge c (skipping triples whose smallest changed
-    member is < c, so multi-changed triples count once):
+
+def containing_worklist(
+    hg: Hypergraph, changed: jax.Array, mask: jax.Array, *,
+    max_deg: int, dedupe_changed: bool = True, nbrs_table=None,
+):
+    """Flat probe work-list enumerating every triple that CONTAINS a query
+    hyperedge — the shared lowering under ``count_triads_containing``
+    (Alg. 3 deltas, ``dedupe_changed=True``: a triple containing several
+    changed edges counts once, at its smallest changed member) and the
+    batched point-query form ``count_triads_containing_each``
+    (``dedupe_changed=False``: each query row q gets every triple containing
+    ``changed[q]``, independently of the other rows).
+
+    Enumeration per query edge c:
       (i)  {c, x, y} with x < y both ∈ N(c)      — c-centred or triangle;
       (ii) {c, x, y} with x ∈ N(c), y ∈ N(x),
            y ∉ N(c) ∪ {c}                        — x-centred open path.
-    Cost O(M · deg²) — independent of the 2-hop region size, which saturates
-    on overlap-heavy hypergraphs.
-    """
-    n_slots = hg.n_edge_slots
-    changed_map = jnp.zeros(n_slots + 1, jnp.int32)
-    safe_changed = jnp.where(mask, jnp.minimum(changed, n_slots), n_slots)
-    # store 1+rank to distinguish "not changed" (0)
-    changed_map = changed_map.at[safe_changed].set(
-        jnp.where(mask, changed + 1, 0)).at[n_slots].set(0)
+    Cost O(M · deg²) per query — independent of the 2-hop region size.
 
+    Returns ``(qi, cs, xs, ys, ok)`` flat int32 arrays of length
+    ``M·(D(D−1)/2 + D²)`` where ``qi`` is the query row each probe belongs
+    to; the sharded drivers split this list across devices.
+
+    ``nbrs_table`` (from ``neighbor_table``, same ``max_deg``) replaces
+    the per-occurrence neighbour derivation with gathers — bit-identical
+    rows, and the work-list cost drops to the candidate comparisons."""
+    n_slots = hg.n_edge_slots
     c_ranks = jnp.where(mask, changed, 0)
-    nb_c = neighbors(hg, c_ranks, max_deg)                 # [M, D]
+    if nbrs_table is None:
+        look = None
+        nb_c = neighbors(hg, c_ranks, max_deg)             # [M, D]
+    else:
+        assert nbrs_table.shape[1] == max_deg, (
+            f"nbrs_table built for max_deg={nbrs_table.shape[1]}, "
+            f"work-list asked for {max_deg}")
+        look = lambda r: nbrs_table[jnp.minimum(r, n_slots)]
+        nb_c = look(c_ranks)
     nb_c = jnp.where(mask[:, None], nb_c, EMPTY)
     M, D = nb_c.shape
+    rows = jnp.arange(M, dtype=jnp.int32)
 
     # ---- case (i): unordered pairs inside N(c)
     iu, ju = jnp.triu_indices(D, k=1)
     xi = nb_c[:, iu]                                        # [M, P1]
     yi = nb_c[:, ju]
     ci = jnp.broadcast_to(c_ranks[:, None], xi.shape)
+    qi_i = jnp.broadcast_to(rows[:, None], xi.shape)
     ok_i = (xi != EMPTY) & (yi != EMPTY)
 
     # ---- case (ii): x ∈ N(c), y ∈ N(x) \ (N(c) ∪ {c})
     x_flat = jnp.where(nb_c.reshape(-1) == EMPTY, 0, nb_c.reshape(-1))
-    nb_x = neighbors(hg, x_flat, max_deg).reshape(M, D, D)  # [M, D, D]
+    nb_x = (neighbors(hg, x_flat, max_deg) if look is None
+            else look(x_flat)).reshape(M, D, D)             # [M, D, D]
     y2 = nb_x
     in_nc = jnp.any(
         (y2[:, :, :, None] == nb_c[:, None, None, :]) & (nb_c != EMPTY)[:, None, None, :],
@@ -308,36 +356,43 @@ def count_triads_containing(
     )
     x2 = jnp.broadcast_to(nb_c[:, :, None], y2.shape)
     c2 = jnp.broadcast_to(c_ranks[:, None, None], y2.shape)
+    qi_ii = jnp.broadcast_to(rows[:, None, None], y2.shape)
 
+    qi = jnp.concatenate([qi_i.reshape(-1), qi_ii.reshape(-1)])
     cs = jnp.concatenate([ci.reshape(-1), c2.reshape(-1)])
     xs = jnp.concatenate([xi.reshape(-1), x2.reshape(-1)])
     ys = jnp.concatenate([yi.reshape(-1), y2.reshape(-1)])
     ok = jnp.concatenate([ok_i.reshape(-1), ok_ii.reshape(-1)])
 
-    # dedupe across changed members: count at the smallest changed member
-    def chg_rank(v):
-        return changed_map[jnp.minimum(jnp.where(v == EMPTY, n_slots, v), n_slots)] - 1
-    for other in (xs, ys):
-        r = chg_rank(other)
-        ok &= ~((r >= 0) & (r < cs))
+    if dedupe_changed:
+        # dedupe across changed members: count at the smallest changed member
+        changed_map = jnp.zeros(n_slots + 1, jnp.int32)
+        safe_changed = jnp.where(mask, jnp.minimum(changed, n_slots), n_slots)
+        # store 1+rank to distinguish "not changed" (0)
+        changed_map = changed_map.at[safe_changed].set(
+            jnp.where(mask, changed + 1, 0)).at[n_slots].set(0)
+
+        def chg_rank(v):
+            return changed_map[
+                jnp.minimum(jnp.where(v == EMPTY, n_slots, v), n_slots)] - 1
+        for other in (xs, ys):
+            r = chg_rank(other)
+            ok &= ~((r >= 0) & (r < cs))
 
     xs = jnp.where(ok, xs, 0)
     ys = jnp.where(ok, ys, 0)
+    return qi, cs, xs, ys, ok
 
-    P = cs.shape[0]
-    pad = (-P) % chunk
-    if pad:
-        z = lambda a, f: jnp.concatenate([a, jnp.full(pad, f, a.dtype)])
-        cs, xs, ys, ok = z(cs, 0), z(xs, 0), z(ys, 0), z(ok, False)
-    nchunk = cs.shape[0] // chunk
 
-    n_out = motifs.NUM_TEMPORAL if temporal else motifs.NUM_CLASSES
-    t_by_rank = times if times is not None else jnp.zeros(n_slots, jnp.int32)
-    kbackend = kops.resolve_backend(
-        backend, c=hg.h2v.max_card, n_bits=hg.num_vertices)
-
-    def one_chunk(args):
-        a, b, c, okc = args
+def containing_classifier(hg: Hypergraph, t_by_rank, *, temporal: bool,
+                          window, backend: str):
+    """Per-chunk classifier for containing-triple probes: ``(c, x, y, ok)``
+    int32[chunk] -> ``(cls, valid)``.  ONE fused kernel launch per chunk
+    with a k=1 candidate stack (|A∩C| = |A∩A∩C| etc.).  ``backend`` must
+    already be resolved; shared between the summed Alg. 3 delta path and
+    the per-query scatter of ``count_triads_containing_each`` (plus its
+    sharded twin)."""
+    def classify(a, b, c, okc):
         A = read_sorted(hg.h2v, a)
         B = read_sorted(hg.h2v, b)
         C = read_sorted(hg.h2v, c)[:, None, :]
@@ -345,10 +400,8 @@ def count_triads_containing(
         card = hg.h2v.mgr.card
         hidx = lambda r: bm.cbt_index(r, hg.h2v.mgr.height)
         ca, cb, cc = card[hidx(a)], card[hidx(b)], card[hidx(c)]
-        # one fused launch with a k=1 candidate stack replaces the former
-        # pair + 3× triple sequence (|A∩C| = |A∩A∩C| etc.)
         iab, iac, ibc, iabc = kops.fused_triple_stats(
-            A, B, C, backend=kbackend, n_bits=hg.num_vertices,
+            A, B, C, backend=backend, n_bits=hg.num_vertices,
             assume_sorted=True)
         iac, ibc, iabc = iac[:, 0], ibc[:, 0], iabc[:, 0]
         if temporal:
@@ -365,6 +418,82 @@ def count_triads_containing(
             cls = _CLASS_ID[_CANON[code]]
             valid = okc
         valid &= cls >= 0
+        return cls, valid
+
+    return classify
+
+
+def containing_point_chunk(classify, n_queries: int, n_out: int):
+    """Per-chunk kernel of the batched point query: classify the probes
+    and scatter-add each hit into its query's histogram row.  Shared
+    between ``count_triads_containing_each`` and its sharded twin (the
+    bit-identical-parity contract rides on there being exactly one copy).
+    ``(qi, c, x, y, ok)`` int32[chunk] -> int32[n_queries, n_out]."""
+    def one_chunk(args):
+        q, a, b, c, okc = args
+
+        def live(_):
+            cls, valid = classify(a, b, c, okc)
+            cls_safe = jnp.where(valid, cls, 0)
+            q_safe = jnp.where(valid, q, n_queries)   # oob -> drop
+            return jnp.zeros((n_queries, n_out), jnp.int32).at[
+                q_safe, cls_safe].add(valid.astype(jnp.int32), mode="drop")
+
+        # probes are validity-compacted: all-masked chunks (the common case
+        # at real degrees) skip the kernel at runtime
+        return jax.lax.cond(
+            jnp.any(okc), live,
+            lambda _: jnp.zeros((n_queries, n_out), jnp.int32), None)
+
+    return one_chunk
+
+
+def pad_probes(arrays, ok, multiple: int):
+    """Pad flat probe arrays (plus their mask) to a multiple of ``multiple``
+    with masked-out zero entries."""
+    P = ok.shape[0]
+    pad = (-P) % multiple
+    if pad:
+        arrays = [jnp.concatenate([a, jnp.zeros(pad, a.dtype)])
+                  for a in arrays]
+        ok = jnp.concatenate([ok, jnp.zeros(pad, bool)])
+    return arrays, ok
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_deg", "chunk", "temporal", "backend"))
+def count_triads_containing(
+    hg: Hypergraph,
+    changed: jax.Array,      # int32[M] changed hyperedge ranks
+    mask: jax.Array,         # bool[M]
+    *,
+    max_deg: int,
+    chunk: int = 1024,
+    temporal: bool = False,
+    times: jax.Array | None = None,
+    window: int | None = None,
+    backend: str | None = None,
+):
+    """Histogram of triads that CONTAIN ≥1 changed hyperedge (each triple
+    counted once — §Perf iteration E2, and arguably the literal reading of
+    the paper's Alg. 3 steps 2/5).  Enumeration and cost:
+    ``containing_worklist``."""
+    _, cs, xs, ys, ok = containing_worklist(
+        hg, changed, mask, max_deg=max_deg, dedupe_changed=True)
+    (cs, xs, ys), ok = pad_probes([cs, xs, ys], ok, chunk)
+    nchunk = cs.shape[0] // chunk
+
+    n_out = motifs.NUM_TEMPORAL if temporal else motifs.NUM_CLASSES
+    t_by_rank = (times if times is not None
+                 else jnp.zeros(hg.n_edge_slots, jnp.int32))
+    kbackend = kops.resolve_backend(
+        backend, c=hg.h2v.max_card, n_bits=hg.num_vertices)
+    classify = containing_classifier(hg, t_by_rank, temporal=temporal,
+                                     window=window, backend=kbackend)
+
+    def one_chunk(args):
+        a, b, c, okc = args
+        cls, valid = classify(a, b, c, okc)
         cls_safe = jnp.where(valid, cls, 0)
         return jnp.zeros(n_out, jnp.int32).at[cls_safe].add(
             valid.astype(jnp.int32))
@@ -375,6 +504,65 @@ def count_triads_containing(
          ys.reshape(nchunk, chunk), ok.reshape(nchunk, chunk)),
     )
     return jnp.sum(hists, axis=0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_deg", "chunk", "temporal", "backend"))
+def count_triads_containing_each(
+    hg: Hypergraph,
+    edges: jax.Array,        # int32[M] query hyperedge ranks
+    mask: jax.Array,         # bool[M]
+    *,
+    max_deg: int,
+    chunk: int = 1024,
+    temporal: bool = False,
+    times: jax.Array | None = None,
+    window: int | None = None,
+    backend: str | None = None,
+    nbrs_table: jax.Array | None = None,
+):
+    """Batched point queries: row q is the histogram of every triad
+    containing ``edges[q]`` — bit-identical to
+    ``count_triads_containing(hg, edges[q:q+1], …)`` per row, but the M
+    probe work-lists concatenate into ONE padded kernel launch per chunk
+    instead of M separate jit dispatches (the query-service hot path,
+    DESIGN.md §7).  Duplicate query ranks each get their own full answer;
+    a masked-off or dead rank yields a zero row.  ``nbrs_table`` (an
+    epoch-level ``neighbor_table``) turns the work-list derivation into
+    gathers — the engine amortises one table across all traffic at an
+    epoch.
+
+    Returns int32[M, 26] (or int32[M, NUM_TEMPORAL] in temporal mode)."""
+    M = edges.shape[0]
+    qi, cs, xs, ys, ok = containing_worklist(
+        hg, edges, mask, max_deg=max_deg, dedupe_changed=False,
+        nbrs_table=nbrs_table)
+    # compact valid probes to the front (stable, so per-query order is
+    # preserved): the fixed-shape D² enumeration is mostly masked padding
+    # for real degrees, and the cond-guarded chunk below skips all-masked
+    # chunks entirely — this is where batching beats M sequential launches
+    # (fig20), not just in dispatch count
+    order = jnp.argsort(~ok)
+    qi, cs, xs, ys, ok = (a[order] for a in (qi, cs, xs, ys, ok))
+    (qi, cs, xs, ys), ok = pad_probes([qi, cs, xs, ys], ok, chunk)
+    nchunk = cs.shape[0] // chunk
+
+    n_out = motifs.NUM_TEMPORAL if temporal else motifs.NUM_CLASSES
+    t_by_rank = (times if times is not None
+                 else jnp.zeros(hg.n_edge_slots, jnp.int32))
+    kbackend = kops.resolve_backend(
+        backend, c=hg.h2v.max_card, n_bits=hg.num_vertices)
+    classify = containing_classifier(hg, t_by_rank, temporal=temporal,
+                                     window=window, backend=kbackend)
+
+    one_chunk = containing_point_chunk(classify, M, n_out)
+    hists = jax.lax.map(
+        one_chunk,
+        (qi.reshape(nchunk, chunk), cs.reshape(nchunk, chunk),
+         xs.reshape(nchunk, chunk), ys.reshape(nchunk, chunk),
+         ok.reshape(nchunk, chunk)),
+    )
+    return jnp.where(mask[:, None], jnp.sum(hists, axis=0), 0)
 
 
 def all_live_region(hg: Hypergraph, max_region: int):

@@ -99,7 +99,12 @@ def churn_step(
     (core/stream.py threads it across batches — DESIGN.md §5).  With ``mesh``
     the affected-region pair list shards across the mesh's devices
     (distributed/triads.py — DESIGN.md §3.2); counts are bit-identical.
-    Returns (hg', counts', times', new_ranks)."""
+    Returns (hg', counts', times', new_ranks, (region, region_mask)) — the
+    trailing pair is the union affected region the deltas were counted
+    over, i.e. exactly the hyperedge ranks whose triad participation may
+    have changed this batch.  ``core/stream.py`` folds it into
+    ``StreamState.dirty_epoch`` so the query-service cache can invalidate
+    per edge (DESIGN.md §7) instead of discarding it."""
     reg_d, md = affected_edges(hg, del_ranks, del_mask, max_deg=max_deg, max_region=max_region)
 
     hg_new, new_ranks = H.update_batch(hg, del_ranks, del_mask, ins_lists, ins_cards, ins_mask)
@@ -121,7 +126,7 @@ def churn_step(
         count = functools.partial(DT.count_triads_sharded, mesh=mesh)
     c_del = count(hg, reg, m, times=times, **kw)
     c_ins = count(hg_new, reg, m, times=times_new, **kw)
-    return hg_new, counts - c_del + c_ins, times_new, new_ranks
+    return hg_new, counts - c_del + c_ins, times_new, new_ranks, (reg, m)
 
 
 @functools.partial(
@@ -150,7 +155,7 @@ def update_triad_counts(
 ):
     """One churn batch for hyperedge-based (or temporal) triads.
     Returns (hg', counts', times')."""
-    hg_new, counts_new, times_new, _ = churn_step(
+    hg_new, counts_new, times_new, _, _ = churn_step(
         hg, counts, del_ranks, del_mask, ins_lists, ins_cards, ins_mask,
         max_deg=max_deg, max_region=max_region, chunk=chunk,
         temporal=temporal, times=times, ins_times=ins_times,
@@ -255,7 +260,10 @@ def vertex_churn_step(
     """Un-jitted single-batch core for incident-vertex triads, reusable
     inside scans (DESIGN.md §5).  With ``mesh`` the affected-region vertex
     pair list shards across the mesh's devices (DESIGN.md §3.2).
-    Returns (hg', counts', new_ranks)."""
+    Returns (hg', counts', new_ranks, (region, region_mask)); the trailing
+    pair is the union affected *vertex* region — the vertices whose local
+    triad participation may have changed (feeds
+    ``StreamState.v_dirty_epoch``, DESIGN.md §7)."""
     reg_d, md = affected_vertices(hg, del_ranks, del_mask, max_nb=max_nb, max_region=max_region)
     hg_new, new_ranks = H.update_batch(hg, del_ranks, del_mask, ins_lists, ins_cards, ins_mask)
     reg_i, mi = affected_vertices(hg_new, new_ranks, ins_mask, max_nb=max_nb, max_region=max_region)
@@ -268,7 +276,7 @@ def vertex_churn_step(
         count = functools.partial(DT.count_vertex_triads_sharded, mesh=mesh)
     c_del = count(hg, reg, m, v_total, **kw)
     c_ins = count(hg_new, reg, m, v_total, **kw)
-    return hg_new, counts - c_del + c_ins, new_ranks
+    return hg_new, counts - c_del + c_ins, new_ranks, (reg, m)
 
 
 @functools.partial(
@@ -292,7 +300,7 @@ def update_vertex_triad_counts(
     mesh=None,
 ):
     """One churn batch for incident-vertex triads. Returns (hg', counts')."""
-    hg_new, counts_new, _ = vertex_churn_step(
+    hg_new, counts_new, _, _ = vertex_churn_step(
         hg, counts, v_total, del_ranks, del_mask, ins_lists, ins_cards,
         ins_mask, max_nb=max_nb, max_region=max_region, chunk=chunk,
         backend=backend, mesh=mesh)

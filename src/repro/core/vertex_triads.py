@@ -136,6 +136,126 @@ def combine_counts(c3, covered, n_edges, wedges, v_total):
     return jnp.stack([type1, type2, type3]).astype(jnp.int32)
 
 
+def point_region(hg: Hypergraph, vids: jax.Array, mask: jax.Array, *,
+                 max_nb: int):
+    """Per-query closed co-occurrence neighbourhoods ``N[v] = {v} ∪ N(v)``
+    — the region a per-vertex point query counts over (DESIGN.md §7).
+    Returns ``(region_vids, region_mask)`` of shape ``[M, max_nb + 1]``."""
+    nb = vertex_neighbors(hg, jnp.where(mask, vids, 0), max_nb)   # [M, K]
+    nb = jnp.where(mask[:, None], nb, EMPTY)
+    region = jnp.concatenate([vids[:, None], nb], axis=1)         # [M, K+1]
+    rmask = jnp.concatenate([mask[:, None], nb != EMPTY], axis=1)
+    return region, rmask
+
+
+def point_worklists(hg: Hypergraph, vids: jax.Array, mask: jax.Array, *,
+                    max_nb: int):
+    """Batched per-query pair work-lists: ``vertex_worklist`` vmapped over
+    the M closed neighbourhoods ``N[v]``, flattened into one probe list with
+    per-probe query ids so the whole batch costs one padded kernel launch
+    per chunk (the query-service hot path, DESIGN.md §7).
+
+    Returns ``(bitmaps [M, nv+1], qi, u, v, ok, n_edges [M], wedges [M])``
+    with ``qi/u/v/ok`` flat arrays of length ``M·(max_nb+1)·max_nb``."""
+    region, rmask = point_region(hg, vids, mask, max_nb=max_nb)
+    wl = jax.vmap(
+        lambda rv, rm: vertex_worklist(
+            hg, jnp.where(rm, rv, 0), rm, max_nb=max_nb),
+        in_axes=(0, 0),
+    )(region, rmask)
+    bitmaps, u, v, ok, n_edges, wedges = wl          # [M, …] each
+    M, P = u.shape
+    qi = jnp.broadcast_to(
+        jnp.arange(M, dtype=jnp.int32)[:, None], (M, P)).reshape(-1)
+    return (bitmaps, qi, u.reshape(-1), v.reshape(-1), ok.reshape(-1),
+            n_edges, wedges)
+
+
+def point_chunk_triangles(hg: Hypergraph, bitmaps, *, max_nb: int,
+                          chunk: int, backend, n_queries: int):
+    """Per-chunk triangle kernel for batched point queries: identical
+    arithmetic to ``chunk_triangles`` except each probe restricts its
+    w-candidates through its own query's region bitmap (``bitmaps[qi]``)
+    and the partial sums scatter per query.  ``(qi, u, v, ok)`` int32[chunk]
+    -> int32[n_queries, 2] (triangles, covered-triangles)."""
+    from repro.kernels import ops as kops
+
+    nv = hg.num_vertices
+    n_bits = hg.n_edge_slots
+    backend = kops.resolve_backend(backend, c=hg.v2h.max_card, n_bits=n_bits)
+
+    def one_chunk(args):
+        qi, u, v, ok = args
+        bm_rows = bitmaps[qi]                           # [chunk, nv+1]
+        nu = vertex_neighbors(hg, u, max_nb)
+        nv_ = vertex_neighbors(hg, v, max_nb)
+        in_nv = jnp.any(
+            (nu[:, :, None] == nv_[:, None, :]) & (nv_[:, None, :] != EMPTY), axis=2
+        )
+        in_region = jnp.take_along_axis(
+            bm_rows, jnp.minimum(nu, nv), axis=1) == 1
+        w_cand = jnp.where(
+            in_nv & (nu != EMPTY) & (nu > v[:, None]) & in_region,
+            nu, EMPTY,
+        )
+        Eu = read_sorted(hg.v2h, u)
+        Ev = read_sorted(hg.v2h, v)
+        w_safe = jnp.where(w_cand == EMPTY, 0, w_cand)
+        Ew = read_sorted(hg.v2h, w_safe.reshape(-1)).reshape(
+            chunk, w_cand.shape[1], -1)
+        nuvw = kops.triple_intersect_count(
+            Eu, Ev, Ew, backend=backend, n_bits=n_bits, assume_sorted=True)
+        tri_ok = ok[:, None] & (w_cand != EMPTY)
+        per_row = jnp.stack(
+            [jnp.sum(tri_ok, axis=1),
+             jnp.sum(tri_ok & (nuvw > 0), axis=1)], axis=1)      # [chunk, 2]
+        q_safe = jnp.where(ok, qi, n_queries)   # n_queries = oob -> drop
+        return jnp.zeros((n_queries, 2), jnp.int32).at[q_safe].add(
+            per_row, mode="drop")
+
+    return one_chunk
+
+
+@functools.partial(jax.jit, static_argnames=("max_nb", "chunk", "backend"))
+def count_vertex_triads_at(
+    hg: Hypergraph,
+    vids: jax.Array,          # int32[M] query vertex ids
+    mask: jax.Array,          # bool[M]
+    v_total: jax.Array | int,
+    *,
+    max_nb: int,
+    chunk: int = 1024,
+    backend: str | None = None,
+) -> jax.Array:
+    """Batched per-vertex point queries: row q is the (type1, type2, type3)
+    histogram of ``count_vertex_triads`` over the closed neighbourhood
+    region ``N[vids[q]]`` — the local triad participation of the query
+    vertex (DESIGN.md §7).  Bit-identical to calling ``count_vertex_triads``
+    with ``point_region``'s row q, but the M pair work-lists concatenate
+    into one padded kernel launch per chunk instead of M jit dispatches.
+    Masked-off rows are zero.  Returns int32[M, 3]."""
+    from repro.core.triads import pad_probes
+
+    M = vids.shape[0]
+    bitmaps, qi, u, v, ok, n_edges, wedges = point_worklists(
+        hg, vids, mask, max_nb=max_nb)
+    (qi, u, v), ok = pad_probes([qi, u, v], ok, chunk)
+    nchunk = qi.shape[0] // chunk
+
+    one_chunk = point_chunk_triangles(hg, bitmaps, max_nb=max_nb,
+                                      chunk=chunk, backend=backend,
+                                      n_queries=M)
+    per = jax.lax.map(
+        one_chunk,
+        (qi.reshape(nchunk, chunk), u.reshape(nchunk, chunk),
+         v.reshape(nchunk, chunk), ok.reshape(nchunk, chunk)),
+    )
+    c3, covered = jnp.sum(per, axis=0).T                  # int32[M] each
+    hist = jax.vmap(combine_counts, in_axes=(0, 0, 0, 0, None))(
+        c3, covered, n_edges, wedges, v_total)
+    return jnp.where(mask[:, None], hist, 0)
+
+
 @functools.partial(jax.jit, static_argnames=("max_nb", "chunk", "backend"))
 def count_vertex_triads(
     hg: Hypergraph,

@@ -186,6 +186,191 @@ def count_vertex_triads_sharded(
     return VT.combine_counts(c3, covered, n_edges, wedges, v_total)
 
 
+# ------------------------------------------------------- query-service family
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "max_deg", "chunk", "temporal", "window",
+                     "backend"),
+)
+def count_triads_containing_each_sharded(
+    hg: Hypergraph,
+    edges: jax.Array,        # int32[M] query hyperedge ranks
+    mask: jax.Array,         # bool[M]
+    *,
+    mesh: Mesh,
+    max_deg: int,
+    chunk: int = 1024,
+    temporal: bool = False,
+    times: jax.Array | None = None,
+    window: int | None = None,
+    backend: str | None = None,
+    nbrs_table: jax.Array | None = None,
+):
+    """Mesh-sharded twin of ``core.triads.count_triads_containing_each``
+    (the batched per-edge point query, DESIGN.md §7): the concatenated
+    containing-triple probe list shards across the mesh and the per-query
+    histograms merge with one psum — int32[M, n_out], bit-identical."""
+    axes = tuple(mesh.axis_names)
+    nshard = shard_count(mesh)
+    backend = kops.resolve_backend(
+        backend, c=hg.h2v.max_card, n_bits=hg.num_vertices)
+
+    M = edges.shape[0]
+    n_out = motifs.NUM_TEMPORAL if temporal else motifs.NUM_CLASSES
+    qi, cs, xs, ys, ok = T.containing_worklist(
+        hg, edges, mask, max_deg=max_deg, dedupe_changed=False,
+        nbrs_table=nbrs_table)
+    # validity-compact as in the single-device path, then deal the sorted
+    # probes round-robin across shards: each shard gets an equal share of
+    # the live probes (front-loaded on its local slice, so the cond-skip
+    # still fires on its masked tail) instead of shard 0 getting them all
+    order = jnp.argsort(~ok)
+    qi, cs, xs, ys, ok = (a[order] for a in (qi, cs, xs, ys, ok))
+    (qi, cs, xs, ys), ok = T.pad_probes([qi, cs, xs, ys], ok, chunk * nshard)
+    deal = lambda a: a.reshape(-1, nshard).T.reshape(-1)
+    qi, cs, xs, ys, ok = (deal(a) for a in (qi, cs, xs, ys, ok))
+    t_by_rank = (times if times is not None
+                 else jnp.zeros(hg.n_edge_slots, jnp.int32))
+
+    def local(hg, t_by_rank, qi, cs, xs, ys, ok):
+        classify = T.containing_classifier(
+            hg, t_by_rank, temporal=temporal, window=window, backend=backend)
+        nchunk = qi.shape[0] // chunk
+        one_chunk = T.containing_point_chunk(classify, M, n_out)
+        hists = jax.lax.map(
+            one_chunk,
+            (qi.reshape(nchunk, chunk), cs.reshape(nchunk, chunk),
+             xs.reshape(nchunk, chunk), ys.reshape(nchunk, chunk),
+             ok.reshape(nchunk, chunk)))
+        return jax.lax.psum(jnp.sum(hists, axis=0), axes)
+
+    sharded = shard_map(
+        local, mesh=mesh,
+        in_specs=(_replicated(hg), P(),
+                  P(axes), P(axes), P(axes), P(axes), P(axes)),
+        out_specs=P(),
+        check_rep=False,
+    )
+    out = sharded(hg, t_by_rank, qi, cs, xs, ys, ok)
+    return jnp.where(mask[:, None], out, 0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mesh", "max_nb", "chunk", "backend"))
+def count_vertex_triads_at_sharded(
+    hg: Hypergraph,
+    vids: jax.Array,         # int32[M] query vertex ids
+    mask: jax.Array,         # bool[M]
+    v_total: jax.Array | int,
+    *,
+    mesh: Mesh,
+    max_nb: int,
+    chunk: int = 1024,
+    backend: str | None = None,
+) -> jax.Array:
+    """Mesh-sharded twin of ``core.vertex_triads.count_vertex_triads_at``:
+    the batched point pair list shards; per-query (triangles, covered)
+    partials psum-merge; the closed-form assembly runs replicated —
+    int32[M, 3], bit-identical."""
+    axes = tuple(mesh.axis_names)
+    nshard = shard_count(mesh)
+    backend = kops.resolve_backend(
+        backend, c=hg.v2h.max_card, n_bits=hg.n_edge_slots)
+
+    M = vids.shape[0]
+    bitmaps, qi, u, v, ok, n_edges, wedges = VT.point_worklists(
+        hg, vids, mask, max_nb=max_nb)
+    (qi, u, v), ok = T.pad_probes([qi, u, v], ok, chunk * nshard)
+
+    def local(hg, bitmaps, qi, u, v, ok):
+        one_chunk = VT.point_chunk_triangles(
+            hg, bitmaps, max_nb=max_nb, chunk=chunk, backend=backend,
+            n_queries=M)
+        nchunk = qi.shape[0] // chunk
+        per = jax.lax.map(
+            one_chunk,
+            (qi.reshape(nchunk, chunk), u.reshape(nchunk, chunk),
+             v.reshape(nchunk, chunk), ok.reshape(nchunk, chunk)))
+        return jax.lax.psum(jnp.sum(per, axis=0), axes)
+
+    sharded = shard_map(
+        local, mesh=mesh,
+        in_specs=(_replicated(hg), P(), P(axes), P(axes), P(axes), P(axes)),
+        out_specs=P(),
+        check_rep=False,
+    )
+    c3, covered = sharded(hg, bitmaps, qi, u, v, ok).T
+    hist = jax.vmap(VT.combine_counts, in_axes=(0, 0, 0, 0, None))(
+        c3, covered, n_edges, wedges, v_total)
+    return jnp.where(mask[:, None], hist, 0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "k", "max_deg", "chunk", "backend", "score"))
+def topk_triplets_sharded(
+    hg: Hypergraph,
+    region_ranks: jax.Array,
+    region_mask: jax.Array,
+    *,
+    mesh: Mesh,
+    k: int,
+    max_deg: int,
+    chunk: int = 1024,
+    backend: str | None = None,
+    score=None,
+):
+    """Mesh-sharded twin of ``query.topk.topk_triplets``: each device scans
+    its slice of the pair work-list keeping a local top-k, the per-device
+    candidates all-gather, and the same deterministic merge
+    (``merge_topk``) picks the global k — bit-identical to single-device
+    for any device count (a triple's canonical generation lives on exactly
+    one shard, so candidates never double-count)."""
+    from repro.query import topk as TK
+
+    score = score or TK.default_score
+    axes = tuple(mesh.axis_names)
+    nshard = shard_count(mesh)
+    backend = kops.resolve_backend(
+        backend, c=hg.h2v.max_card, n_bits=hg.num_vertices)
+
+    bitmap, nbrs, row_of, a, b, ok = T.probe_worklist(
+        hg, region_ranks, region_mask, max_deg=max_deg)
+    a, b, ok = T.pad_pairs(a, b, ok, chunk * nshard)
+
+    def local(hg, nbrs, row_of, bitmap, a, b, ok):
+        stats = T.chunk_probe_stats(hg, nbrs, row_of, bitmap, chunk=chunk,
+                                    backend=backend)
+        best_s, best_t = TK.topk_scan(stats, score, a, b, ok, k=k,
+                                      chunk=chunk)
+        gs = jax.lax.all_gather(best_s, axes, tiled=True)
+        gt = jax.lax.all_gather(best_t, axes, tiled=True)
+        return TK.merge_topk(gs, gt, k)
+
+    sharded = shard_map(
+        local, mesh=mesh,
+        in_specs=(_replicated(hg), P(), P(), P(),
+                  P(axes), P(axes), P(axes)),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )
+    best_s, best_t = sharded(hg, nbrs, row_of, bitmap, a, b, ok)
+    return TK.TopK(scores=best_s, triples=best_t)
+
+
+def serve_queries(snap, requests, *, mesh: Mesh, **kw):
+    """Sharded front door of the query service: exactly
+    ``query.engine.serve`` with every batched lowering — per-edge and
+    per-vertex point batches, top-k — running across ``mesh``'s devices
+    (the histogram query stays O(1) off the snapshot).  Answers are
+    bit-identical to the single-device ``serve``
+    (tests/test_query.py::test_serve_sharded_parity)."""
+    from repro.query import engine as QE
+
+    return QE.serve(snap, requests, mesh=mesh, **kw)
+
+
 # ------------------------------------------------- production-mesh dry lowering
 
 def abstract_hypergraph(

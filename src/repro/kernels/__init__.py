@@ -1,3 +1,26 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Set-intersection kernel surface (DESIGN.md §2.3–§2.5).
+
+Public entry points re-exported from ``repro.kernels.ops`` — the jit'd
+three-backend dispatch layer (``pallas`` Mosaic kernels on TPU, ``xla``
+jnp oracles, ``bitset`` packed lane-popcount) — so consumers write
+``from repro import kernels; kernels.fused_triple_stats(...)`` instead of
+reaching into the backend modules.  ``kernels.intersect`` (Pallas),
+``kernels.ref`` (oracles) and ``kernels.bitset`` (packing) remain the
+private lowerings behind this surface.
+"""
+from repro.kernels.ops import (
+    BACKENDS,
+    default_backend,
+    fused_triple_stats,
+    membership,
+    pair_intersect_count,
+    resolve_backend,
+    stack_pair_intersect_count,
+    triple_intersect_count,
+)
+
+__all__ = [
+    "BACKENDS", "default_backend", "fused_triple_stats", "membership",
+    "pair_intersect_count", "resolve_backend", "stack_pair_intersect_count",
+    "triple_intersect_count",
+]

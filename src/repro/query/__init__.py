@@ -1,0 +1,31 @@
+"""Triad query service: snapshot-isolated batched point/top-k queries over
+the live ESCHER store (DESIGN.md §7, docs/API.md).
+
+    from repro import query
+
+    snap = query.of_stream(state)          # epoch-stamped immutable view
+    cache = query.QueryCache()
+    answers = query.serve(
+        snap,
+        [query.triads_containing_edge(3), query.triads_at_vertex(7),
+         query.topk_triplets(10), query.histogram()],
+        max_deg=32, cache=cache)
+"""
+from repro.query.cache import QueryCache
+from repro.query.engine import (
+    Request,
+    histogram,
+    serve,
+    topk_triplets,
+    triads_at_vertex,
+    triads_containing_edge,
+)
+from repro.query.snapshot import Snapshot, of_graph, of_stream
+from repro.query.topk import TopK, default_score
+from repro.query.topk import topk_triplets as run_topk
+
+__all__ = [
+    "QueryCache", "Request", "Snapshot", "TopK", "default_score",
+    "histogram", "of_graph", "of_stream", "run_topk", "serve",
+    "topk_triplets", "triads_at_vertex", "triads_containing_edge",
+]

@@ -1,0 +1,71 @@
+"""Epoch-keyed result cache for point queries (DESIGN.md §7).
+
+Host-side by design: query results are small numpy vectors on their way to
+users, and the validity test is a pure host computation against the
+snapshot's dirty-epoch maps — no device traffic on a hit.
+
+Invalidation rule (the whole cache in one line): an entry cached at epoch
+``E`` is valid for a snapshot at epoch ``E' >= E`` iff the key was not
+dirtied in ``(E, E']``, i.e. ``dirty_epoch[key] <= E``.  The dirty maps
+are exactly the union affected regions that ``update.churn_step`` /
+``vertex_churn_step`` compute for Alg. 3 — an edge outside every batch's
+2-hop line-graph closure (vertex outside the 1-hop vertex closure) cannot
+have gained or lost a triad, so serving its cached histogram is exact, not
+approximate (validated in tests/test_query.py).
+
+One cache serves one stream: epochs of different streams are unrelated.
+Entries are never evicted by churn (staleness is detected lazily at
+lookup); ``max_entries`` bounds memory with FIFO eviction.
+"""
+from __future__ import annotations
+
+import collections
+
+
+class QueryCache:
+    """Per-edge / per-vertex point-query cache keyed by epoch.
+
+    Keys are ``(kind, key)`` where the engine passes ``key = (rank|vid,
+    params)`` — ``params`` being the serve parameters the answer depends
+    on (max_deg / temporal family / window for edges, max_nb / v_total
+    for vertices), so the same rank under different parameters never
+    cross-serves.  Values are whatever the engine stores (numpy
+    histograms).  ``hits`` / ``misses`` count lookups for observability
+    (fig20 reports the hit rate)."""
+
+    def __init__(self, max_entries: int = 1 << 16):
+        self._d: collections.OrderedDict = collections.OrderedDict()
+        self.max_entries = max_entries
+        self.hits = 0
+        self.misses = 0
+        # epoch-level neighbour index (engine.py): (epoch, max_deg, table).
+        # One table serves every batched edge point query at its epoch;
+        # rebuilt lazily when the served snapshot's epoch moves on.
+        self.edge_index: tuple[int, int, object] | None = None
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def lookup(self, kind: str, key: int, snap, dirty: int):
+        """Value cached for ``(kind, key)`` if still valid at ``snap``,
+        else None.  ``dirty`` is the key's last-dirty epoch under ``snap``
+        (``snap.edge_dirty(rank)`` / ``snap.vertex_dirty(vid)``)."""
+        entry = self._d.get((kind, key))
+        if entry is not None:
+            epoch, value = entry
+            # not from the future (a later snapshot's answer is not this
+            # epoch's), and untouched since it was cached
+            if epoch <= snap.epoch and dirty <= epoch:
+                self.hits += 1
+                return value
+        self.misses += 1
+        return None
+
+    def store(self, kind: str, key: int, epoch: int, value) -> None:
+        self._d[(kind, key)] = (epoch, value)
+        while len(self._d) > self.max_entries:
+            self._d.popitem(last=False)
+
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0

@@ -1,0 +1,263 @@
+"""Batched heterogeneous query planner over a snapshot (DESIGN.md §7).
+
+``serve`` takes a vector of mixed requests — per-edge point queries,
+per-vertex point queries, top-k triplets, histogram — against one
+``Snapshot`` and answers them with at most one batched lowering per
+*kind*:
+
+  * requests group by kind;
+  * point-query groups first consult the epoch-keyed ``QueryCache``
+    (cache.py) — hits are host lookups, no device work;
+  * the misses of a group are deduplicated, padded to a power-of-two batch
+    (bounding jit specialisations), and lowered through ONE call to the
+    batched cores — ``triads.count_triads_containing_each`` /
+    ``vertex_triads.count_vertex_triads_at`` — so N point queries cost one
+    padded kernel launch per chunk instead of N jit dispatches;
+  * ``topk`` runs the streaming top-k engine (topk.py) over the live
+    region; ``histogram`` is O(1) off the snapshot's maintained counts.
+
+With ``mesh=`` the batched point lowerings and the top-k scan run sharded
+across the mesh's devices through ``distributed/triads.py`` —
+bit-identical answers (``serve_queries`` there is the sharded front door).
+
+Every answer is bit-identical to a fresh recount of the same quantity at
+the snapshot's epoch, cache hits included — the coherence contract
+validated in tests/test_query.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import motifs
+from repro.core import triads as T
+from repro.core import vertex_triads as VT
+from repro.query import topk as TK
+from repro.query.cache import QueryCache
+from repro.query.snapshot import Snapshot
+
+__all__ = [
+    "Request", "triads_containing_edge", "triads_at_vertex",
+    "topk_triplets", "histogram", "serve",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One query.  Build with the constructor helpers below."""
+    kind: str      # "edge" | "vertex" | "topk" | "histogram"
+    arg: int = 0   # edge rank / vertex id
+    k: int = 0     # topk only
+
+
+def triads_containing_edge(rank: int) -> Request:
+    """Histogram of every triad containing hyperedge ``rank`` (a dead or
+    unknown rank answers all-zeros)."""
+    return Request("edge", arg=int(rank))
+
+
+def triads_at_vertex(vid: int) -> Request:
+    """(type1, type2, type3) of ``count_vertex_triads`` over the closed
+    co-occurrence neighbourhood N[vid] — the vertex's local triad
+    participation."""
+    return Request("vertex", arg=int(vid))
+
+
+def topk_triplets(k: int) -> Request:
+    """The k highest-|a∩b∩c| connected hyperedge triples (pluggable score
+    via ``serve(score=...)``; ties toward the smallest (a, b, c))."""
+    return Request("topk", k=int(k))
+
+
+def histogram() -> Request:
+    """The snapshot's full triad histogram — O(1) from the maintained
+    stream counts (recounted only for count-less graph snapshots)."""
+    return Request("histogram")
+
+
+def _pad_len(n: int, lo: int = 8) -> int:
+    m = lo
+    while m < n:
+        m *= 2
+    return m
+
+
+def _edge_index(snap, max_deg, cache):
+    """Epoch-level neighbour table for batched edge point queries: built
+    once per (epoch, max_deg) and parked on the cache, so every batch at
+    this epoch pays gathers instead of the h2v∘v2h row derivation."""
+    if cache is not None and cache.edge_index is not None:
+        epoch, deg, table = cache.edge_index
+        if epoch == snap.epoch and deg == max_deg:
+            return table
+    table = T.neighbor_table(snap.hg, max_deg=max_deg)
+    if cache is not None:
+        cache.edge_index = (snap.epoch, max_deg, table)
+    return table
+
+
+def _point_batch(snap, kind, idx_by_key, fn, cache, params):
+    """Serve one point-query group: cache probe, dedupe, one batched
+    lowering for the misses, fill + store.  ``idx_by_key`` maps query key
+    (rank / vid) -> list of request positions; ``fn(keys, mask) ->
+    int32[M, n_out]`` is the batched core.  ``params`` is the tuple of
+    serve parameters the answer depends on (bounds, temporal family, …):
+    it joins the cache key, so the same rank queried under different
+    parameters never cross-serves.  Returns {position: answer}."""
+    out = {}
+    dirty_of = (snap.edge_dirty if kind == "edge" else snap.vertex_dirty)
+    misses = []
+    for key, positions in idx_by_key.items():
+        val = None
+        if cache is not None:
+            val = cache.lookup(kind, (key, params), snap, dirty_of(key))
+        if val is None:
+            misses.append(key)
+        else:
+            for p in positions:
+                out[p] = val
+    if misses:
+        M = _pad_len(len(misses))
+        keys = np.zeros(M, np.int32)
+        keys[: len(misses)] = misses
+        mask = np.arange(M) < len(misses)
+        answers = np.asarray(fn(jnp.asarray(keys), jnp.asarray(mask)))
+        for j, key in enumerate(misses):
+            # own the row and freeze it: the same object is handed to every
+            # caller and future cache hit — a consumer mutating an answer
+            # must error, not corrupt the cache
+            val = answers[j].copy()
+            val.setflags(write=False)
+            if cache is not None:
+                cache.store(kind, (key, params), snap.epoch, val)
+            for p in idx_by_key[key]:
+                out[p] = val
+    return out
+
+
+def serve(
+    snap: Snapshot,
+    requests: list[Request],
+    *,
+    max_deg: int = 32,
+    max_nb: int = 32,
+    max_region: int = 1023,
+    chunk: int = 1024,
+    temporal: bool = False,
+    window: int | None = None,
+    v_total: int | None = None,
+    backend: str | None = None,
+    score=None,
+    mesh=None,
+    cache: QueryCache | None = None,
+):
+    """Answer ``requests`` against ``snap``; returns one host result per
+    request, in order (numpy histograms; ``topk.TopK`` with numpy leaves
+    for topk).  Bounds (``max_deg``/``max_nb``/``max_region``/``chunk``)
+    follow the counting-engine conventions (docs/API.md); ``temporal``
+    classifies edge point queries with the snapshot's timestamps.
+    ``cache`` enables the epoch-keyed point cache; ``mesh`` runs the
+    batched lowerings sharded (distributed/triads.py)."""
+    hg = snap.hg
+    vt = v_total if v_total is not None else hg.num_vertices
+    times = snap.times if temporal else None
+
+    # the epoch-level neighbour index only pays off when it can be reused —
+    # build it lazily (first edge miss) and only in cached (service) mode
+    def table():
+        return _edge_index(snap, max_deg, cache) if cache is not None else None
+
+    if mesh is not None:
+        from repro.distributed import triads as DT
+        edge_fn = lambda keys, mask: DT.count_triads_containing_each_sharded(
+            hg, keys, mask, mesh=mesh, max_deg=max_deg, chunk=chunk,
+            temporal=temporal, times=times, window=window, backend=backend,
+            nbrs_table=table())
+        vertex_fn = lambda keys, mask: DT.count_vertex_triads_at_sharded(
+            hg, keys, mask, vt, mesh=mesh, max_nb=max_nb, chunk=chunk,
+            backend=backend)
+        topk_fn = lambda reg, m, k: DT.topk_triplets_sharded(
+            hg, reg, m, mesh=mesh, k=k, max_deg=max_deg, chunk=chunk,
+            backend=backend, score=score)
+    else:
+        edge_fn = lambda keys, mask: T.count_triads_containing_each(
+            hg, keys, mask, max_deg=max_deg, chunk=chunk, temporal=temporal,
+            times=times, window=window, backend=backend, nbrs_table=table())
+        vertex_fn = lambda keys, mask: VT.count_vertex_triads_at(
+            hg, keys, mask, vt, max_nb=max_nb, chunk=chunk, backend=backend)
+        topk_fn = lambda reg, m, k: TK.topk_triplets(
+            hg, reg, m, k=k, max_deg=max_deg, chunk=chunk, backend=backend,
+            score=score)
+
+    n_out = motifs.NUM_TEMPORAL if temporal else motifs.NUM_CLASSES
+    bounds = {"edge": snap.hg.n_edge_slots, "vertex": snap.hg.num_vertices}
+    zeros = {"edge": np.zeros(n_out, np.int32),
+             "vertex": np.zeros(3, np.int32)}
+    for z in zeros.values():
+        z.setflags(write=False)         # shared across result positions
+    groups: dict[str, dict[int, list[int]]] = {"edge": {}, "vertex": {}}
+    results: list = [None] * len(requests)
+    for i, r in enumerate(requests):
+        if r.kind in groups:
+            # a key outside the store's address space answers all-zeros
+            # directly — never hits the device (whose gathers clamp) or
+            # the cache (whose dirty maps it would index out of bounds)
+            if 0 <= r.arg < bounds[r.kind]:
+                groups[r.kind].setdefault(r.arg, []).append(i)
+            else:
+                results[i] = zeros[r.kind]
+        elif r.kind not in ("topk", "histogram"):
+            raise ValueError(f"unknown query kind {r.kind!r}")
+
+    # the cache key carries every parameter the answer depends on; chunk /
+    # backend / mesh are excluded on purpose (bit-identical by contract)
+    edge_params = (max_deg, temporal, window if temporal else None)
+    vertex_params = (max_nb, int(vt))
+    if groups["edge"]:
+        results_by_pos = _point_batch(snap, "edge", groups["edge"],
+                                      edge_fn, cache, edge_params)
+        for p, v in results_by_pos.items():
+            results[p] = v
+    if groups["vertex"]:
+        results_by_pos = _point_batch(snap, "vertex", groups["vertex"],
+                                      vertex_fn, cache, vertex_params)
+        for p, v in results_by_pos.items():
+            results[p] = v
+
+    # topk / histogram-recount enumerate the full live region: refuse a
+    # bound that would silently truncate it (all_live_region keeps a
+    # prefix with no saturation signal)
+    if any(r.kind == "topk" or (r.kind == "histogram" and snap.counts is None)
+           for r in requests):
+        n_live = int(hg.h2v.n_live)
+        if n_live > max_region:
+            raise ValueError(
+                f"max_region={max_region} < {n_live} live hyperedges: the "
+                "top-k/histogram region would silently truncate — raise "
+                "max_region (or serve histogram from a stream snapshot's "
+                "maintained counts)")
+
+    # topk: one engine run per distinct k (uncached — any dirty edge could
+    # reorder the ranking, so there is no per-key invalidation to exploit)
+    topk_cache: dict[int, TK.TopK] = {}
+    for i, r in enumerate(requests):
+        if r.kind == "topk":
+            if r.k not in topk_cache:
+                reg, m = T.all_live_region(hg, max_region)
+                res = topk_fn(reg, m, r.k)
+                topk_cache[r.k] = TK.TopK(
+                    scores=np.asarray(res.scores),
+                    triples=np.asarray(res.triples))
+            results[i] = topk_cache[r.k]
+        elif r.kind == "histogram":
+            if snap.counts is not None:
+                results[i] = np.asarray(snap.counts)
+            else:
+                reg, m = T.all_live_region(hg, max_region)
+                results[i] = np.asarray(T.count_triads(
+                    hg, reg, m, max_deg=max_deg, chunk=chunk,
+                    temporal=temporal, times=times, window=window,
+                    backend=backend))
+    return results

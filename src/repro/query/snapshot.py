@@ -1,0 +1,94 @@
+"""Snapshot isolation for the triad query service (DESIGN.md §7).
+
+A ``Snapshot`` is a cheap immutable view of the evolving store at a fixed
+epoch.  Because every array in ``Hypergraph``/``StreamState`` is a jax
+array — functionally updated, never mutated in place — a snapshot needs no
+copy: it is a pytree of *references* plus the epoch counter.  The stream is
+free to keep scanning; each ``_stream_step`` produces fresh arrays and the
+snapshot keeps pointing at the old ones (double-buffering for free).
+
+The one subtlety is racing an *in-flight* step: ``of_stream`` reads the
+epoch scalar back to the host, which blocks until every dispatched step has
+actually committed — so the captured ``(hg, counts, times)`` are always a
+consistent post-step state, never a torn one.  The dirty-epoch maps are
+pulled to host ints at the same time: the cache validity test
+(``dirty_epoch[rank] <= cached_epoch`` — cache.py) then costs a numpy
+lookup per query instead of a device round-trip.
+
+Epoch semantics: ``StreamState.epoch`` counts applied scheduler steps;
+static graphs snapshot at epoch 0 (``of_graph``).  Two snapshots of the
+same stream are comparable (query answers cached at the earlier one can be
+served at the later one if untouched by churn); snapshots of different
+streams or graphs are not — use one ``QueryCache`` per stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hypergraph import Hypergraph
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """Immutable epoch-stamped view of a hypergraph (plus, when taken from
+    a stream, its maintained histogram and timestamps).
+
+    ``dirty_epoch`` / ``v_dirty_epoch`` are **host** int32 arrays: per
+    hyperedge rank / vertex id, the last epoch whose churn batch may have
+    changed its triad participation (0 = never).  ``counts`` is whatever
+    family the source stream maintained (26-class, temporal, or the
+    3-vector) and backs the O(1) ``histogram`` query; ``None`` for plain
+    graphs snapshotted without counts."""
+    hg: Hypergraph
+    epoch: int
+    counts: jax.Array | None = None
+    times: jax.Array | None = None
+    dirty_epoch: np.ndarray | None = None
+    v_dirty_epoch: np.ndarray | None = None
+
+    def edge_dirty(self, rank: int) -> int:
+        """Last epoch at which ``rank``'s triad participation may have
+        changed (0 when tracking is absent — of_graph snapshots).  Keys
+        outside the map answer the current epoch — never-cacheable — as
+        defence in depth (the engine filters them before reaching here)."""
+        if self.dirty_epoch is None:
+            return 0
+        if not 0 <= rank < len(self.dirty_epoch):
+            return self.epoch
+        return int(self.dirty_epoch[rank])
+
+    def vertex_dirty(self, vid: int) -> int:
+        if self.v_dirty_epoch is None:
+            return 0
+        if not 0 <= vid < len(self.v_dirty_epoch):
+            return self.epoch
+        return int(self.v_dirty_epoch[vid])
+
+
+def of_stream(state) -> Snapshot:
+    """Snapshot a ``core.stream.StreamState``.  Blocks until the last
+    dispatched step has committed (reading ``epoch`` synchronises), then
+    captures references — O(1) device work, two small host pulls for the
+    dirty maps."""
+    return Snapshot(
+        hg=state.hg,
+        epoch=int(state.epoch),
+        counts=state.counts,
+        times=state.times,
+        dirty_epoch=np.asarray(state.dirty_epoch),
+        v_dirty_epoch=np.asarray(state.v_dirty_epoch),
+    )
+
+
+def of_graph(hg: Hypergraph, *, counts=None, times=None,
+             epoch: int = 0) -> Snapshot:
+    """Snapshot a static ``Hypergraph`` (no stream): epoch 0, nothing ever
+    dirty.  If you mutate ``hg`` through the store ops yourself, take a new
+    snapshot with a larger ``epoch`` and a fresh cache — this constructor
+    cannot observe out-of-band churn."""
+    return Snapshot(hg=hg, epoch=epoch, counts=counts, times=times,
+                    dirty_epoch=None, v_dirty_epoch=None)

@@ -1,0 +1,146 @@
+"""Top-k hyperedge triplets by intersection weight (DESIGN.md §7).
+
+The retrieval model of Niu & Aksoy's top-k hyperedge-triplet work: rank
+unordered triples {a, b, c} of live hyperedges by a score of their joint
+intersection structure — by default ``|a∩b∩c|`` — and return the k best.
+
+Enumeration rides the existing probe lowering (``triads.probe_worklist`` +
+``triads.chunk_probe_stats``, i.e. one fused ``kernels.ops.
+fused_triple_stats`` launch per chunk, bitset backend included for
+high-cardinality rows): every *connected* triple is generated as an
+adjacent pair (a < b) plus a third edge c ∈ N(a) ∪ N(b).  A closed triple
+is generated three times and an open one twice, so a canonicalisation mask
+keeps exactly the generation whose (a, b) is the lexicographically
+smallest adjacent pair of the triple:
+
+    keep  iff  c > b  (a,b is the lex-min pair of a<b<c; always adjacent)
+          or   a < c < b and |a∩c| = 0  ((a,c) precedes (a,b) but is not
+                                         adjacent; c's own pair follows)
+
+(a generation with c < a is never kept — (c, ·) pairs precede (a, b) and
+at least one is adjacent since c came from N(a) ∪ N(b)).  Each connected
+triple therefore survives exactly once — the brute-force oracle in
+tests/test_query.py checks both the multiset and the order.
+
+The k best are kept by a streaming merge: per chunk, candidates are
+flattened, lexsorted by ``(-score, a, b, c)`` — ties broken
+deterministically toward the smallest triple — and merged with the running
+top-k through the same sort.  Scores must be non-negative; -1 is the
+internal "no candidate" sentinel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import triads as T
+from repro.core.hypergraph import Hypergraph
+from repro.core.store import EMPTY
+from repro.kernels import ops as kops
+
+
+def default_score(iab, iac, ibc, iabc, ca, cb, cc):
+    """|a∩b∩c| — the hyperedge-triplet weight of the retrieval model."""
+    del iab, iac, ibc, ca, cb, cc
+    return iabc
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TopK:
+    """``scores[k]`` descending; ``triples[k, 3]`` sorted ids a < b < c;
+    ``valid`` masks real entries (fewer than k connected triples exist
+    otherwise)."""
+    scores: jax.Array   # int32[k]
+    triples: jax.Array  # int32[k, 3]
+
+    @property
+    def valid(self) -> jax.Array:
+        return self.scores >= 0
+
+
+def merge_topk(scores, triples, k: int):
+    """Deterministic top-k: lexsort by (-score, a, b, c), take k.  Also the
+    cross-device merge of the sharded driver (all-gathered candidates run
+    through the same sort, so sharded == single-device bit-identically)."""
+    order = jnp.lexsort(
+        (triples[:, 2], triples[:, 1], triples[:, 0], -scores))[:k]
+    return scores[order], triples[order]
+
+
+def topk_scan(stats, score, a, b, ok, *, k: int, chunk: int):
+    """Streaming top-k over a (padded) flat pair list: per chunk, one fused
+    stats launch, canonicalisation, then ``merge_topk`` against the running
+    best.  The shared core under ``topk_triplets`` and its sharded twin
+    (each device scans its local slice).  Returns ``(scores, triples)``."""
+    nchunk = a.shape[0] // chunk
+
+    def body(carry, args):
+        best_s, best_t = carry
+        a, b, ok = args
+        cand, (iab, iac, ibc, iabc), (ca, cb, cc) = stats(a, b)
+        s = score(iab[:, None], iac, ibc, iabc, ca[:, None], cb[:, None], cc)
+
+        # canonical generation only (module docstring): each connected
+        # triple scored exactly once
+        keep = (cand > b[:, None]) | (
+            (cand > a[:, None]) & (cand < b[:, None]) & (iac == 0))
+        valid = ok[:, None] & (cand != EMPTY) & keep
+        s = jnp.where(valid, s, -1)
+
+        # triple sorted ascending: a < b always; place c
+        c_ = jnp.where(valid, cand, EMPTY)
+        a_ = jnp.broadcast_to(a[:, None], c_.shape)
+        b_ = jnp.broadcast_to(b[:, None], c_.shape)
+        u = jnp.minimum(a_, c_)
+        w = jnp.maximum(b_, c_)
+        v = jnp.where(c_ < a_, a_, jnp.where(c_ > b_, b_, c_))
+
+        ss = jnp.concatenate([best_s, s.reshape(-1)])
+        tt = jnp.concatenate(
+            [best_t,
+             jnp.stack([u.reshape(-1), v.reshape(-1), w.reshape(-1)], axis=1)])
+        return merge_topk(ss, tt, k), None
+
+    init = (jnp.full(k, -1, jnp.int32), jnp.full((k, 3), EMPTY, jnp.int32))
+    (best_s, best_t), _ = jax.lax.scan(
+        body, init,
+        (a.reshape(nchunk, chunk), b.reshape(nchunk, chunk),
+         ok.reshape(nchunk, chunk)))
+    return best_s, best_t
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "max_deg", "chunk", "backend", "score"))
+def topk_triplets(
+    hg: Hypergraph,
+    region_ranks: jax.Array,   # int32[R] — candidate triples live inside
+    region_mask: jax.Array,    # bool[R]
+    *,
+    k: int,
+    max_deg: int,
+    chunk: int = 1024,
+    backend: str | None = None,
+    score=None,                # static fn(iab, iac, ibc, iabc, ca, cb, cc)
+) -> TopK:
+    """The k highest-scoring connected hyperedge triples inside the region
+    (use ``triads.all_live_region`` for the whole store).  ``score`` is a
+    static traced function of the fused per-triple stats returning
+    non-negative int32 — default ``|a∩b∩c|``.  Ties break toward the
+    lexicographically smallest (a, b, c); results are bit-identical across
+    backends and device meshes (the sharded twin all-gathers per-device
+    candidates through the same merge)."""
+    score = score or default_score
+    backend = kops.resolve_backend(
+        backend, c=hg.h2v.max_card, n_bits=hg.num_vertices)
+
+    bitmap, nbrs, row_of, a, b, ok = T.probe_worklist(
+        hg, region_ranks, region_mask, max_deg=max_deg)
+    a, b, ok = T.pad_pairs(a, b, ok, chunk)
+    stats = T.chunk_probe_stats(hg, nbrs, row_of, bitmap, chunk=chunk,
+                                backend=backend)
+    best_s, best_t = topk_scan(stats, score, a, b, ok, k=k, chunk=chunk)
+    return TopK(scores=best_s, triples=best_t)

@@ -1,0 +1,487 @@
+"""Triad query service (src/repro/query/, DESIGN.md §7).
+
+The coherence contract under test: every answer served through
+snapshot + batching + cache during an active stream is bit-identical to a
+fresh recount of the same quantity at the same epoch — single-device and
+sharded.  Plus the subsystem-level oracles: brute-force top-k (order
+included: ties must break deterministically toward the smallest triple)
+and batched-vs-sequential point-query parity across all three kernel
+backends.
+
+Graphs are tiny on purpose (the pallas backend runs in interpret mode on
+CPU); on a 1-device host the sharded parity degenerates to a 1-way mesh —
+the CI distributed job re-runs this file on a real 8-way host mesh.
+"""
+import dataclasses
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as BL
+from repro.core import hypergraph as H
+from repro.core import motifs
+from repro.core import stream as S
+from repro.core import triads as T
+from repro.core import vertex_triads as VT
+from repro.distributed import triads as DT
+from repro.hypergraph import generators as GEN
+from repro import query
+
+BACKENDS = ("xla", "pallas", "bitset")
+# max_deg=32 exceeds the largest possible line-graph degree at these sizes:
+# the brute-force oracles see untruncated neighbourhoods, so the engine
+# must too for the comparisons to be exact
+V, MAXC, MAXD, MAXNB, MAXR, CHUNK = 16, 8, 32, 16, 63, 64
+KW = dict(max_deg=MAXD, max_nb=MAXNB, max_region=MAXR, chunk=CHUNK)
+
+
+def _hg(n_edges=24, seed=0):
+    edges = GEN.random_hypergraph(n_edges, V, profile="coauth", max_card=6,
+                                  seed=seed, skew=0.3)
+    return H.from_lists(edges, num_vertices=V, max_edges=4 * n_edges,
+                        max_card=MAXC, slack=4.0)
+
+
+def _brute_topk(hg, k, score=None):
+    """All connected hyperedge triples, scored from python sets, sorted by
+    (-score, a, b, c) — the oracle for topk_triplets including tie order."""
+    py = H.to_python(hg)
+    out = []
+    for a, b, c in itertools.combinations(sorted(py), 3):
+        A, B, C = py[a], py[b], py[c]
+        iab, iac, ibc = len(A & B), len(A & C), len(B & C)
+        if (iab > 0) + (iac > 0) + (ibc > 0) < 2:
+            continue                      # not connected
+        iabc = len(A & B & C)
+        s = iabc if score is None else score(iab, iac, ibc, iabc,
+                                             len(A), len(B), len(C))
+        out.append((s, (a, b, c)))
+    out.sort(key=lambda x: (-x[0], x[1]))
+    return out[:k]
+
+
+def _topk_host(res):
+    return [(int(s), tuple(map(int, t)))
+            for s, t in zip(res.scores, res.triples) if s >= 0]
+
+
+# ---------------------------------------------------------------- top-k
+
+def test_topk_matches_bruteforce_with_ties():
+    hg = _hg(30, seed=2)
+    reg, m = T.all_live_region(hg, MAXR)
+    res = query.run_topk(hg, reg, m, k=12, max_deg=MAXD, chunk=CHUNK)
+    want = _brute_topk(hg, 12)
+    assert _topk_host(res) == [(s, t) for s, t in want]
+    # the oracle list contains ties (that is what makes the order check
+    # meaningful) — guard the fixture against drifting into all-distinct
+    scores = [s for s, _ in want]
+    assert len(set(scores)) < len(scores)
+
+
+def test_topk_k_exceeds_triples_and_pluggable_score():
+    hg = _hg(8, seed=3)
+    reg, m = T.all_live_region(hg, MAXR)
+    big = 64
+    res = query.run_topk(hg, reg, m, k=big, max_deg=MAXD, chunk=CHUNK)
+    want = _brute_topk(hg, big)
+    got = _topk_host(res)
+    assert got == want                    # fewer than k: rest invalid
+    assert int(np.asarray(res.valid).sum()) == len(want)
+
+    def score(iab, iac, ibc, iabc, ca, cb, cc):
+        return iab + iac + ibc + 5 * iabc
+
+    res = query.run_topk(hg, reg, m, k=8, max_deg=MAXD, chunk=CHUNK,
+                         score=score)
+    want = _brute_topk(hg, 8, score=lambda iab, iac, ibc, iabc, ca, cb, cc:
+                       iab + iac + ibc + 5 * iabc)
+    assert _topk_host(res) == want
+
+
+# --------------------------------------------- batched point queries
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_batched_point_edge_matches_sequential(backend):
+    """count_triads_containing_each row q == count_triads_containing of the
+    single edge q — the batched form is a launch-count optimisation, not a
+    semantic change — on every kernel backend."""
+    hg = _hg()
+    live = H.live_ranks_host(hg)
+    q = jnp.asarray(live[:6].astype(np.int32))
+    m = jnp.ones(6, bool)
+    batched = T.count_triads_containing_each(
+        hg, q, m, max_deg=MAXD, chunk=CHUNK, backend=backend)
+    for i in range(6):
+        single = T.count_triads_containing(
+            hg, q[i: i + 1], m[:1], max_deg=MAXD, chunk=CHUNK,
+            backend=backend)
+        assert (np.asarray(batched[i]) == np.asarray(single)).all(), i
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_batched_point_vertex_matches_region_recount(backend):
+    """count_vertex_triads_at row q == count_vertex_triads over the closed
+    neighbourhood N[vids[q]], on every kernel backend."""
+    hg = _hg()
+    vids = jnp.arange(8, dtype=jnp.int32)
+    m = jnp.ones(8, bool)
+    batched = VT.count_vertex_triads_at(
+        hg, vids, m, V, max_nb=MAXNB, chunk=CHUNK, backend=backend)
+    reg, rm = VT.point_region(hg, vids, m, max_nb=MAXNB)
+    for i in range(8):
+        single = VT.count_vertex_triads(
+            hg, reg[i], rm[i], V, max_nb=MAXNB, chunk=CHUNK, backend=backend)
+        assert (np.asarray(batched[i]) == np.asarray(single)).all(), i
+
+
+def test_batched_point_edge_temporal_parity():
+    """Temporal classification (δ-window) threads through the batched form
+    identically to the single-edge core."""
+    hg = _hg()
+    times = jnp.arange(hg.n_edge_slots, dtype=jnp.int32) * 7 + 1
+    live = H.live_ranks_host(hg)
+    q = jnp.asarray(live[:4].astype(np.int32))
+    m = jnp.ones(4, bool)
+    kw = dict(max_deg=MAXD, chunk=CHUNK, temporal=True, times=times,
+              window=40)
+    batched = T.count_triads_containing_each(hg, q, m, **kw)
+    for i in range(4):
+        single = T.count_triads_containing(hg, q[i: i + 1], m[:1], **kw)
+        assert (np.asarray(batched[i]) == np.asarray(single)).all(), i
+
+
+def test_batched_point_edge_with_neighbor_index():
+    """The epoch-level neighbour table is a pure gather cache: answers with
+    nbrs_table are bit-identical to the table-less path (and the table rows
+    equal per-call ``neighbors``)."""
+    from repro.core.hypergraph import neighbors
+
+    hg = _hg()
+    live = H.live_ranks_host(hg)
+    q = jnp.asarray(live[:6].astype(np.int32))
+    m = jnp.ones(6, bool)
+    table = T.neighbor_table(hg, max_deg=MAXD, block=32)
+    rows = neighbors(hg, jnp.asarray(live.astype(np.int32)), MAXD)
+    got = table[jnp.asarray(live.astype(np.int32))]
+    assert (np.asarray(got) == np.asarray(rows)).all()
+    plain = T.count_triads_containing_each(hg, q, m, max_deg=MAXD,
+                                           chunk=CHUNK)
+    indexed = T.count_triads_containing_each(hg, q, m, max_deg=MAXD,
+                                             chunk=CHUNK, nbrs_table=table)
+    assert (np.asarray(plain) == np.asarray(indexed)).all()
+
+
+def test_batched_point_edge_dead_and_duplicate_ranks():
+    hg = _hg()
+    live = H.live_ranks_host(hg)
+    dead = next(r for r in range(hg.n_edge_slots) if r not in set(live))
+    q = jnp.asarray([live[0], dead, live[0], live[1]], dtype=jnp.int32)
+    m = jnp.asarray([True, True, True, False])
+    out = np.asarray(T.count_triads_containing_each(
+        hg, q, m, max_deg=MAXD, chunk=CHUNK))
+    assert (out[0] == out[2]).all() and out[0].sum() > 0
+    assert out[1].sum() == 0 and out[3].sum() == 0
+
+
+# ------------------------------------------------- stream + snapshot
+
+def _empty_hg():
+    return H.from_lists([], num_vertices=V, max_edges=128, max_card=MAXC,
+                        max_vdeg=64, min_capacity=4096)
+
+
+def _check_coherent(snap, cache, mesh=None):
+    """Serve a full query battery against ``snap`` and compare every answer
+    with a fresh recount of the same quantity on the snapshot's graph."""
+    hg = snap.hg
+    live = H.live_ranks_host(hg)
+    reqs = ([query.triads_containing_edge(int(r)) for r in live[:5]]
+            + [query.triads_at_vertex(v) for v in range(4)]
+            + [query.topk_triplets(6), query.histogram()])
+    serve_kw = dict(v_total=V, cache=cache, **KW)
+    if mesh is not None:
+        out = DT.serve_queries(snap, reqs, mesh=mesh, **serve_kw)
+    else:
+        out = query.serve(snap, reqs, **serve_kw)
+
+    n_e = len(live[:5])
+    for j, r in enumerate(live[:5]):
+        ref = T.count_triads_containing(
+            hg, jnp.asarray([int(r)], jnp.int32), jnp.ones(1, bool),
+            max_deg=MAXD, chunk=CHUNK)
+        assert (out[j] == np.asarray(ref)).all(), f"edge {r} at epoch {snap.epoch}"
+    reg, rm = VT.point_region(hg, jnp.arange(4, dtype=jnp.int32),
+                              jnp.ones(4, bool), max_nb=MAXNB)
+    for v in range(4):
+        ref = VT.count_vertex_triads(hg, reg[v], rm[v], V, max_nb=MAXNB,
+                                     chunk=CHUNK)
+        assert (out[n_e + v] == np.asarray(ref)).all(), f"vertex {v}"
+    want = _brute_topk(hg, 6)
+    assert _topk_host(out[n_e + 4]) == want
+    areg, am = T.all_live_region(hg, MAXR)
+    ref = T.count_triads(hg, areg, am, max_deg=MAXD, chunk=CHUNK)
+    assert (out[n_e + 5] == np.asarray(ref)).all()
+    return out
+
+
+def test_interleaved_stream_and_queries_coherent():
+    """The acceptance contract: queries served from snapshot + cache while
+    the stream keeps mutating match a fresh recount at the same epoch; the
+    warm cache actually gets hits and stays exact."""
+    events = GEN.event_stream(40, V, seed=1, max_card=6, insert_frac=0.7)
+    log = S.log_from_events(events, max_card=MAXC)
+    st = S.make_stream(_empty_hg(), log, jnp.zeros(motifs.NUM_CLASSES,
+                                                   jnp.int32))
+    n_steps = S.plan_steps(events, 8)
+    cache = query.QueryCache()
+    run_kw = dict(batch=8, mode="edge", max_deg=MAXD, max_nb=MAXNB,
+                  max_region=MAXR, chunk=CHUNK)
+    done = 0
+    while done < n_steps:
+        step = min(3, n_steps - done)
+        st = S.run_stream(st, n_steps=step, **run_kw)
+        done += step
+        assert int(st.error) == 0
+        snap = query.of_stream(st)
+        assert snap.epoch == done
+        _check_coherent(snap, cache)
+        # repeat traffic at the same epoch: answers must come warm (this
+        # tiny dense graph dirties ~everything every batch, so cross-epoch
+        # hits are exercised separately in test_dirty_epoch_maps_localised)
+        h0 = cache.hits
+        _check_coherent(snap, cache)
+        assert cache.hits > h0
+    assert int(st.log.n_pending) == 0
+
+
+def test_snapshot_isolation_under_further_churn():
+    """A snapshot keeps answering at ITS epoch after the stream moves on —
+    jax immutability makes the old arrays a free double buffer."""
+    events = GEN.event_stream(30, V, seed=4, max_card=6, insert_frac=0.8)
+    log = S.log_from_events(events, max_card=MAXC)
+    st = S.make_stream(_empty_hg(), log, jnp.zeros(motifs.NUM_CLASSES,
+                                                   jnp.int32))
+    n_steps = S.plan_steps(events, 8)
+    st = S.run_stream(st, n_steps=2, batch=8, mode="edge", max_deg=MAXD,
+                      max_region=MAXR, chunk=CHUNK)
+    snap_old = query.of_stream(st)
+    before = _check_coherent(snap_old, cache=None)
+    st = S.run_stream(st, n_steps=n_steps - 2, batch=8, mode="edge",
+                      max_deg=MAXD, max_region=MAXR, chunk=CHUNK)
+    assert int(st.epoch) == n_steps
+    after = _check_coherent(snap_old, cache=None)    # old snapshot, again
+    for x, y in zip(before, after):
+        if isinstance(x, query.TopK):
+            assert (x.scores == y.scores).all()
+        else:
+            assert (x == y).all()
+    _check_coherent(query.of_stream(st), cache=None)  # and the new epoch
+
+
+def test_dirty_epoch_maps_localised():
+    """Two line-graph components; churn inside one.  The other component's
+    edges/vertices stay clean (dirty_epoch unchanged), so their cached
+    answers survive — and the last batch's touched slots are recoverable as
+    dirty_epoch == epoch (observability)."""
+    # component A on vertices 0..5, component B on 8..13 (disjoint)
+    ev = [(0, "ins", [0, 1, 2]), (1, "ins", [1, 2, 3]), (2, "ins", [2, 3, 4]),
+          (3, "ins", [8, 9, 10]), (4, "ins", [9, 10, 11]),
+          (5, "ins", [10, 11, 12])]
+    log = S.log_from_events(ev, max_card=MAXC, capacity=16)
+    st = S.make_stream(_empty_hg(), log, jnp.zeros(motifs.NUM_CLASSES,
+                                                   jnp.int32))
+    run_kw = dict(batch=8, mode="edge", max_deg=MAXD, max_nb=MAXNB,
+                  max_region=MAXR, chunk=CHUNK)
+    st = S.run_stream(st, n_steps=1, **run_kw)
+    cache = query.QueryCache()
+    snap1 = query.of_stream(st)
+    out1 = _check_coherent(snap1, cache)
+    h1, m1 = cache.hits, cache.misses
+
+    # churn component A only: delete its first edge
+    st = dataclasses.replace(st, log=S.push_events(
+        st.log, jnp.asarray([10]), jnp.asarray([S.DEL]),
+        jnp.full((1, MAXC), jnp.iinfo(jnp.int32).max, jnp.int32),
+        jnp.asarray([0]), jnp.asarray([0]), jnp.ones(1, bool)))
+    st = S.run_stream(st, n_steps=1, **run_kw)
+    assert int(st.error) == 0
+    snap2 = query.of_stream(st)
+
+    # component B untouched: its ranks keep dirty_epoch from insertion time
+    rank_a = int(np.asarray(st.rank_of)[1])   # a surviving A edge
+    rank_b = int(np.asarray(st.rank_of)[3])   # a B edge
+    assert snap2.edge_dirty(rank_a) == snap2.epoch      # A dirtied now
+    assert snap2.edge_dirty(rank_b) < snap2.epoch       # B still clean
+    assert snap2.vertex_dirty(0) == snap2.epoch
+    assert snap2.vertex_dirty(12) < snap2.epoch
+    # the last batch's touched edge set is exactly dirty_epoch == epoch
+    last = np.nonzero(np.asarray(st.dirty_epoch) == int(st.epoch))[0]
+    assert rank_a in last and rank_b not in last
+
+    out2 = _check_coherent(snap2, cache)
+    # B's point answers were served from cache (hits grew), yet exact
+    assert cache.hits > h1
+    del out1, out2, m1
+
+
+def test_cache_keys_include_serve_params():
+    """The same rank served under different parameters (bounds, temporal
+    family) must not cross-serve cached answers — regression for the
+    params-blind cache key."""
+    events = GEN.event_stream(30, V, seed=8, max_card=6, insert_frac=0.8)
+    st = S.make_stream(_empty_hg(), S.log_from_events(events, max_card=MAXC),
+                       jnp.zeros(motifs.NUM_CLASSES, jnp.int32))
+    st = S.run_stream(st, n_steps=S.plan_steps(events, 8), batch=8,
+                      mode="edge", max_deg=MAXD, max_region=MAXR,
+                      chunk=CHUNK)
+    snap = query.of_stream(st)
+    r = int(H.live_ranks_host(snap.hg)[0])
+    cache = query.QueryCache()
+    req = [query.triads_containing_edge(r)]
+    full = query.serve(snap, req, cache=cache, **KW)[0]
+    # tighter degree bound: different (smaller) answer, not the cached one
+    kw8 = dict(KW, max_deg=8)
+    trunc = query.serve(snap, req, cache=cache, **kw8)[0]
+    ref8 = T.count_triads_containing(
+        snap.hg, jnp.asarray([r], jnp.int32), jnp.ones(1, bool),
+        max_deg=8, chunk=CHUNK)
+    assert (trunc == np.asarray(ref8)).all()
+    # temporal family: different shape entirely
+    temp = query.serve(snap, req, cache=cache, temporal=True, window=40,
+                       **KW)[0]
+    assert temp.shape == (motifs.NUM_TEMPORAL,)
+    assert full.shape == (motifs.NUM_CLASSES,)
+    # and the original parameters still serve the original answer, warm
+    again = query.serve(snap, req, cache=cache, **KW)[0]
+    assert (again == full).all()
+
+
+def test_out_of_range_keys_answer_zeros():
+    """Ranks/vids outside the store's address space answer all-zeros and
+    never touch the device or crash the cache's dirty-map lookup."""
+    events = GEN.event_stream(20, V, seed=9, max_card=6, insert_frac=0.9)
+    st = S.make_stream(_empty_hg(), S.log_from_events(events, max_card=MAXC),
+                       jnp.zeros(motifs.NUM_CLASSES, jnp.int32))
+    st = S.run_stream(st, n_steps=S.plan_steps(events, 8), batch=8,
+                      mode="edge", max_deg=MAXD, max_region=MAXR,
+                      chunk=CHUNK)
+    snap = query.of_stream(st)
+    cache = query.QueryCache()
+    reqs = [query.triads_containing_edge(snap.hg.n_edge_slots + 3),
+            query.triads_containing_edge(-1),
+            query.triads_at_vertex(snap.hg.num_vertices + 7),
+            query.triads_at_vertex(-2)]
+    out = query.serve(snap, reqs, cache=cache, v_total=V, **KW)
+    assert out[0].sum() == 0 and out[1].sum() == 0
+    assert out[2].sum() == 0 and out[3].sum() == 0
+
+    # served arrays are frozen: a consumer mutating an answer errors
+    # instead of corrupting the shared cache entry
+    live = H.live_ranks_host(snap.hg)
+    ans = query.serve(snap, [query.triads_containing_edge(int(live[0]))],
+                      cache=cache, **KW)[0]
+    with pytest.raises(ValueError):
+        ans[0] = 99
+
+    # a top-k/histogram region that cannot hold every live edge is refused,
+    # not silently truncated
+    with pytest.raises(ValueError, match="live hyperedges"):
+        query.serve(snap, [query.topk_triplets(3)],
+                    **dict(KW, max_region=3))
+
+
+def test_track_dirty_false_is_conservative_and_exact():
+    """track_dirty=False skips the derived-family closure: the vertex map
+    bumps wholesale (nothing vertex-cached survives an epoch), the edge
+    map stays exact from the counting by-product, and answers are still
+    coherent."""
+    events = GEN.event_stream(30, V, seed=10, max_card=6, insert_frac=0.8)
+    st = S.make_stream(_empty_hg(), S.log_from_events(events, max_card=MAXC),
+                       jnp.zeros(motifs.NUM_CLASSES, jnp.int32))
+    st = S.run_stream(st, n_steps=S.plan_steps(events, 8), batch=8,
+                      mode="edge", max_deg=MAXD, max_region=MAXR,
+                      chunk=CHUNK, track_dirty=False)
+    assert int(st.error) == 0
+    # vertex map: every entry carries some epoch > 0 (always-dirty)
+    assert int(np.asarray(st.v_dirty_epoch).min()) > 0
+    _check_coherent(query.of_stream(st), cache=query.QueryCache())
+
+
+def test_serve_sharded_parity():
+    """serve_queries(mesh=...) == serve() bit-identically, mid-stream, for
+    a mixed batch — on however many host devices this run has."""
+    mesh = DT.count_mesh(min(8, len(jax.devices())))
+    events = GEN.event_stream(30, V, seed=6, max_card=6, insert_frac=0.75)
+    log = S.log_from_events(events, max_card=MAXC)
+    st = S.make_stream(_empty_hg(), log, jnp.zeros(motifs.NUM_CLASSES,
+                                                   jnp.int32))
+    st = S.run_stream(st, n_steps=2, batch=8, mode="edge", max_deg=MAXD,
+                      max_region=MAXR, chunk=CHUNK)
+    snap = query.of_stream(st)
+    _check_coherent(snap, cache=None, mesh=mesh)
+
+
+def test_vertex_mode_stream_dirty_and_queries():
+    """Vertex-mode streams maintain both dirty maps too; vertex point
+    queries + histogram stay coherent at every snapshot."""
+    events = GEN.event_stream(24, V, seed=7, max_card=6, insert_frac=0.8)
+    log = S.log_from_events(events, max_card=MAXC)
+    st = S.make_stream(_empty_hg(), log, jnp.zeros(3, jnp.int32))
+    n_steps = S.plan_steps(events, 8)
+    st = S.run_stream(st, n_steps=n_steps, batch=8, mode="vertex",
+                      max_nb=MAXNB, max_deg=MAXD, max_region=MAXR,
+                      chunk=CHUNK, v_total=V)
+    assert int(st.error) == 0
+    snap = query.of_stream(st)
+    out = query.serve(snap, [query.triads_at_vertex(2), query.histogram()],
+                      v_total=V, **KW)
+    reg, rm = VT.point_region(snap.hg, jnp.asarray([2], jnp.int32),
+                              jnp.ones(1, bool), max_nb=MAXNB)
+    ref = VT.count_vertex_triads(snap.hg, reg[0], rm[0], V, max_nb=MAXNB,
+                                 chunk=CHUNK)
+    assert (out[0] == np.asarray(ref)).all()
+    ref = BL.stathyper_static(snap.hg, V, max_nb=MAXNB, max_region=V,
+                              chunk=CHUNK)
+    assert (out[1] == np.asarray(ref)).all()
+    assert int(np.asarray(st.dirty_epoch).max()) > 0     # edge map tracked
+
+
+def test_interleaved_ingest_query_hypothesis():
+    """Property form of the coherence contract: random interleavings of
+    ingest and point queries always match a fresh recount at the same
+    epoch, warm or cold cache."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as hst
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=hst.integers(0, 50), cut=hst.integers(1, 5))
+    def prop(seed, cut):
+        events = GEN.event_stream(24, V, seed=seed, max_card=6,
+                                  insert_frac=0.7)
+        log = S.log_from_events(events, max_card=MAXC)
+        st = S.make_stream(_empty_hg(), log,
+                           jnp.zeros(motifs.NUM_CLASSES, jnp.int32))
+        n_steps = S.plan_steps(events, 8)
+        cache = query.QueryCache()
+        run_kw = dict(batch=8, mode="edge", max_deg=MAXD, max_nb=MAXNB,
+                      max_region=MAXR, chunk=CHUNK)
+        done = 0
+        while done < n_steps:
+            step = min(cut, n_steps - done)
+            st = S.run_stream(st, n_steps=step, **run_kw)
+            done += step
+            snap = query.of_stream(st)
+            live = H.live_ranks_host(snap.hg)
+            reqs = [query.triads_containing_edge(int(r)) for r in live[:4]]
+            out = query.serve(snap, reqs, cache=cache, v_total=V, **KW)
+            for j, r in enumerate(live[:4]):
+                ref = T.count_triads_containing(
+                    snap.hg, jnp.asarray([int(r)], jnp.int32),
+                    jnp.ones(1, bool), max_deg=MAXD, chunk=CHUNK)
+                assert (out[j] == np.asarray(ref)).all(), (seed, done, r)
+
+    prop()
