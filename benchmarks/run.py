@@ -40,6 +40,7 @@ def main() -> None:
     for path, figure, points in (
         ("BENCH_kernels.json", "fig19_fused_kernel", figures.KERNEL_BENCH),
         ("BENCH_query.json", "fig20_query_throughput", figures.QUERY_BENCH),
+        ("BENCH_elastic.json", "fig21_elastic_growth", figures.ELASTIC_BENCH),
     ):
         if points:
             with open(path, "w") as f:

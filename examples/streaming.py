@@ -6,7 +6,14 @@ scanned through the Alg. 3 incremental core, keeping hyperedge-based and
 temporal (sliding δ-window, with retention expiry) triad counts current.
 Final counts are verified against from-scratch recounts.
 
+With ``--unbounded`` the stores start at *minimal* capacity and the run
+relies on ``run_stream(auto_grow=True)`` (DESIGN.md §8): the segmented
+driver detects capacity / rank-space exhaustion at segment boundaries,
+compacts or doubles the stores (core/elastic.py), and resumes — the final
+counts are still exact, and the growth journey is printed.
+
     PYTHONPATH=src python examples/streaming.py [--events 300] [--batch 16]
+    PYTHONPATH=src python examples/streaming.py --unbounded
 """
 import argparse
 import time
@@ -34,6 +41,9 @@ def main():
                     help="retention window: older inserts auto-delete")
     ap.add_argument("--report-every", type=int, default=4,
                     help="print live counts every N scheduler steps")
+    ap.add_argument("--unbounded", action="store_true",
+                    help="start at minimal capacity and auto-grow "
+                         "(run_stream(auto_grow=True), DESIGN.md §8)")
     args = ap.parse_args()
 
     nv = args.vertices
@@ -46,14 +56,26 @@ def main():
     print(f"stream: {len(events)} events ({n_ins} ins, "
           f"{len(events) - n_ins} del), t ∈ [0, {max(t for t, _, _ in events)}]")
 
-    hg = H.from_lists([], num_vertices=nv, max_edges=4 * args.events,
-                      max_card=8, max_vdeg=64, min_capacity=64 * args.events)
+    if args.unbounded:
+        # deliberately undersized: ~one granule of memory and an 8-rank
+        # tree — everything past that is auto_grow's problem
+        hg = H.from_lists([], num_vertices=nv, max_edges=8, max_card=8,
+                          max_vdeg=64, granule=32, slack=1.0)
+        print(f"unbounded mode: starting at h2v capacity "
+              f"{hg.h2v.capacity}, {hg.n_edge_slots} rank slots")
+    else:
+        hg = H.from_lists([], num_vertices=nv, max_edges=4 * args.events,
+                          max_card=8, max_vdeg=64,
+                          min_capacity=64 * args.events)
     log = S.log_from_events(events, max_card=8)
     edge = S.make_stream(hg, log, jnp.zeros(motifs.NUM_CLASSES, jnp.int32))
     temp = S.make_stream(hg, S.log_from_events(events, max_card=8),
                          jnp.zeros(motifs.NUM_TEMPORAL, jnp.int32))
 
-    kw = dict(batch=args.batch, max_deg=MAXD, max_region=MAXR, chunk=CHUNK)
+    grow_log: list[dict] = []          # edge-mode repairs (reported below)
+    temp_grow_log: list[dict] = []     # temporal-mode repairs
+    kw = dict(batch=args.batch, max_deg=MAXD, max_region=MAXR, chunk=CHUNK,
+              auto_grow=args.unbounded)
     n_edge = S.plan_steps(events, args.batch)
     n_temp = S.plan_steps(events, args.batch, expiry=args.expiry)
 
@@ -62,7 +84,8 @@ def main():
     done = 0
     while done < n_edge:
         step = min(args.report_every, n_edge - done)
-        edge = S.run_stream(edge, n_steps=step, mode="edge", **kw)
+        edge = S.run_stream(edge, n_steps=step, mode="edge",
+                            grow_log=grow_log, **kw)
         done += step
         jax.block_until_ready(edge.counts)
         print(f"  step {done:3d}/{n_edge}: live={int(edge.hg.h2v.n_live):4d} "
@@ -70,16 +93,26 @@ def main():
     dt = time.perf_counter() - t0
     print(f"hyperedge mode: {len(events) / dt:,.0f} events/sec "
           f"(incl. per-report sync)")
+    if args.unbounded:
+        for g in grow_log:
+            print(f"  grew at epoch {g['epoch']}: "
+                  f"h2v cap={g['h2v_capacity']} height={g['h2v_height']}, "
+                  f"v2h cap={g['v2h_capacity']}")
+        print(f"  {len(grow_log)} repairs; final h2v capacity "
+              f"{edge.hg.h2v.capacity} ({edge.hg.n_edge_slots} rank slots)")
 
     # --- temporal counts with retention expiry, one fused scan
     t0 = time.perf_counter()
     temp = S.run_stream(temp, n_steps=n_temp, mode="temporal",
-                        window=args.window, expiry=args.expiry, **kw)
+                        window=args.window, expiry=args.expiry,
+                        grow_log=temp_grow_log, **kw)
     jax.block_until_ready(temp.counts)
     dt = time.perf_counter() - t0
+    grew = (f", {len(temp_grow_log)} repairs (final cap "
+            f"{temp.hg.h2v.capacity})" if temp_grow_log else "")
     print(f"temporal mode (δ={args.window}, expiry={args.expiry}): "
           f"{len(events) / dt:,.0f} events/sec, live={int(temp.hg.h2v.n_live)}, "
-          f"temporal triads={int(temp.counts.sum())}")
+          f"temporal triads={int(temp.counts.sum())}{grew}")
 
     # --- verify against from-scratch recounts
     ref_e = BL.mochy_static(edge.hg, max_deg=MAXD, max_region=MAXR, chunk=CHUNK)
@@ -87,10 +120,10 @@ def main():
                             max_deg=MAXD, max_region=MAXR, chunk=CHUNK)
     ok_e = bool((np.asarray(edge.counts) == np.asarray(ref_e)).all())
     ok_t = bool((np.asarray(temp.counts) == np.asarray(ref_t)).all())
-    err = int(edge.error) | int(temp.error)
+    errs = S.decode_errors(edge) + S.decode_errors(temp)
     print(f"exact vs recount: hyperedge={ok_e} temporal={ok_t} "
-          f"sticky_error={err}")
-    assert ok_e and ok_t and err == 0
+          f"sticky_errors={[(e.name, e.epoch) for e in errs] or 'none'}")
+    assert ok_e and ok_t and not errs
 
 
 if __name__ == "__main__":

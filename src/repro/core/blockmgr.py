@@ -186,6 +186,52 @@ def find_kth_available(mgr: BlockManager, ks: jax.Array) -> jax.Array:
     return jax.vmap(one)(ks)
 
 
+def recompute_avail(mgr: BlockManager) -> BlockManager:
+    """Full bottom-up rebuild of the ``avail`` subtree counters from the
+    ``deleted`` flags — one level-sized scatter per tree level.  Used after
+    whole-tree surgery (``grow_manager``, ``core/elastic.py`` compaction)
+    where path-local ``propagate_avail`` would not cover every node."""
+    avail = jnp.zeros_like(mgr.avail)
+    for d in range(mgr.height - 1, -1, -1):
+        idx = jnp.arange(1 << d, 1 << (d + 1), dtype=jnp.int32)
+        avail = _recompute_avail(avail, mgr.deleted, idx)
+    return dataclasses.replace(mgr, avail=avail)
+
+
+def grow_manager(mgr: BlockManager, levels: int = 1) -> BlockManager:
+    """Grow the perfect BST by ``levels`` (rank space ×2 per level) with
+    every existing rank preserved (core/elastic.py, DESIGN.md §8).
+
+    The in-order rank of a node is the paper's hyperedge id, so growth must
+    keep ranks stable while every *heap index* moves: rank ``r`` sits at
+    ``cbt_index(r, h)`` in the old tree and ``cbt_index(r, h + levels)`` in
+    the new one.  Migration is therefore one parallel gather/scatter per
+    node array — no pointer walking, no data movement in ``A`` (block
+    addresses are rank-independent).  The added ranks come up as dummy
+    slots (``present=0``), exactly the state insertion Case 3 activates, so
+    a grown tree is indistinguishable from one built at the larger size
+    with the same contents.  ``avail`` is rebuilt bottom-up at the end."""
+    if levels <= 0:
+        return mgr
+    h_new = mgr.height + levels
+    new = build_manager((1 << h_new) - 1)
+    assert new.height == h_new
+    ranks = jnp.arange((1 << mgr.height) - 1, dtype=jnp.int32)
+    src = cbt_index(ranks, mgr.height)
+    dst = cbt_index(ranks, h_new)
+    new = dataclasses.replace(
+        new,
+        addr0=new.addr0.at[dst].set(mgr.addr0[src]),
+        cap0=new.cap0.at[dst].set(mgr.cap0[src]),
+        addr1=new.addr1.at[dst].set(mgr.addr1[src]),
+        cap1=new.cap1.at[dst].set(mgr.cap1[src]),
+        card=new.card.at[dst].set(mgr.card[src]),
+        present=new.present.at[dst].set(mgr.present[src]),
+        deleted=new.deleted.at[dst].set(mgr.deleted[src]),
+    )
+    return recompute_avail(new)
+
+
 def claim_nodes(mgr: BlockManager, idxs: jax.Array, mask: jax.Array) -> BlockManager:
     """Re-assign freed nodes to new hyperedges (insertion Case 1): clear the
     deleted flag, mark present, propagate ``avail`` down-counts."""

@@ -1,0 +1,198 @@
+"""Elastic ESCHER store: host-coordinated growth and compaction (DESIGN.md §8).
+
+The base store is fixed-capacity twice over: the flattened array ``A`` is a
+bump allocator that never reclaims, and the perfect-BST block manager has a
+static rank space of ``2^h - 1``.  Either bound saturating sets a sticky
+error bit (``store.ERR_CAPACITY`` / ``store.ERR_RANKS``) and every result
+after that point is garbage — "pre-size or die".  This module supplies the
+two host-coordinated repairs that turn the store into an open-ended
+structure; both preserve every live list and every rank bit-exactly, so all
+downstream ids (stream ``rank_of`` maps, cached query keys, ``times`` /
+dirty-epoch indices) stay valid:
+
+  * ``grow_store`` / ``grow_hypergraph`` — geometric regrowth: re-allocate
+    ``A`` at a larger capacity (block addresses are absolute, so the old
+    contents are a prefix copy — no migration), and/or raise the perfect
+    BST one or more levels (``blockmgr.grow_manager`` moves every node to
+    its new heap index while the in-order *rank* of each node — the paper's
+    hyperedge id — is unchanged by construction).
+
+  * ``compact_store`` / ``compact_hypergraph`` — defragmentation: rebuild
+    ``A`` so every live list owns a single right-sized primary block
+    (insertion Case-2 overflow chains fold back into primaries), and
+    reclaim everything else — leaked overflow blocks from horizontal
+    regrowth, the oversized blocks of deleted edges, the granule blocks of
+    empty lists.  Freed tree nodes keep their ``deleted`` flag — insertion
+    Case 1 still reuses their *ids* — but their blocks are stripped to
+    zero capacity; reuse then allocates fresh from the compacted tail
+    (ops.py's zero-capacity chain path).
+
+``core/stream.py`` drives both from ``run_stream(auto_grow=True)``: a
+sticky growable error at a segment boundary rolls the segment back,
+compacts and/or grows the checkpoint, and re-runs — bit-identically,
+because nothing observable depends on block layout, capacity padding, or
+tree height (tests/test_elastic.py, tests/test_elastic_property.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blockmgr as bm
+from repro.core.hypergraph import Hypergraph
+from repro.core.store import EMPTY, END, EscherStore, block_size, read_dense
+
+
+def grow_store(
+    store: EscherStore,
+    *,
+    capacity: int | None = None,
+    levels: int = 0,
+    register_ranks: bool = False,
+) -> EscherStore:
+    """Re-allocate ``A`` at ``capacity`` (None = unchanged) and/or grow the
+    block manager by ``levels`` tree levels (rank space ×2 per level).
+
+    Contents are preserved bit-exactly: block addresses are absolute so the
+    old ``A`` is a prefix of the new one, and ``grow_manager`` migrates
+    every node to its new heap index under the same rank.  ``free_ptr``,
+    ``n_ranks`` and the sticky ``error`` carry over untouched — growth
+    repairs *future* overflow, it cannot launder a store that already
+    overflowed (roll back to a pre-error checkpoint instead, as
+    ``run_stream(auto_grow=True)`` does).
+
+    ``register_ranks=True`` (the v2h idiom) marks every rank of the grown
+    tree present with a zero-capacity primary: vertex ids beyond the old
+    universe become valid incident lists whose first block is allocated
+    lazily on first insert (ops.py handles ``cap0 == 0`` end to end)."""
+    cap_old = store.capacity
+    cap = cap_old if capacity is None else int(capacity)
+    if cap < cap_old:
+        raise ValueError(f"capacity {cap} < current {cap_old}: cannot shrink"
+                         " (use compact_store to reclaim the tail)")
+    A = store.A if cap == cap_old else jnp.concatenate(
+        [store.A, jnp.full(cap - cap_old, EMPTY, jnp.int32)])
+    mgr = bm.grow_manager(store.mgr, levels)
+    n_ranks = store.n_ranks
+    if register_ranks:
+        # register only never-used ranks: a deleted rank must stay in the
+        # Case-1 free pool (present=0, deleted=1), not come back to life
+        # with its stale pre-delete contents
+        n_slots = (1 << mgr.height) - 1
+        ranks = jnp.arange(n_slots, dtype=jnp.int32)
+        idx = bm.cbt_index(ranks, mgr.height)
+        fresh = (mgr.present[idx] == 0) & (mgr.deleted[idx] == 0)
+        mgr = dataclasses.replace(
+            mgr, present=mgr.present.at[idx].max(fresh.astype(jnp.int32)))
+        n_ranks = jnp.int32(n_slots)
+    return dataclasses.replace(store, A=A, mgr=mgr, n_ranks=n_ranks)
+
+
+def _live_layout(store: EscherStore):
+    """Per-rank layout facts shared by ``compact_store`` and
+    ``store_stats`` — one derivation, so the stats-driven compact-vs-double
+    policy (stream.py) can never disagree with what compaction actually
+    reclaims.  Returns ``(ranks, idx, present, card, keep, sizes)`` where
+    ``sizes`` is the right-sized block footprint of each kept list."""
+    mgr = store.mgr
+    ranks = jnp.arange((1 << mgr.height) - 1, dtype=jnp.int32)
+    idx = bm.cbt_index(ranks, mgr.height)
+    present = mgr.present[idx] == 1
+    card = jnp.where(present, mgr.card[idx], 0)
+    keep = present & (card > 0)
+    sizes = jnp.where(keep, block_size(card, store.granule), 0)
+    return ranks, idx, present, card, keep, sizes
+
+
+def compact_store(
+    store: EscherStore, *, capacity: int | None = None
+) -> EscherStore:
+    """Defragment: every live non-empty list gets a single right-sized
+    primary block (paper sizing, chain folded in), placed by one prefix
+    sum in rank order; everything else — chains, dead blocks, empty-list
+    blocks — returns to the free tail.  ``capacity`` optionally re-sizes
+    ``A`` in the same pass (it must cover the compacted prefix).
+
+    Reads are unchanged bit-for-bit (``read_dense`` row order is the
+    stored order, which the rebuild preserves), ranks are untouched, and
+    freed tree nodes stay ``deleted`` so insertion Case 1 keeps reusing
+    their ids — only their blocks are stripped (zero-capacity, lazily
+    re-allocated on reuse)."""
+    mgr = store.mgr
+    ranks, idx, present, card, keep, sizes = _live_layout(store)
+    addr = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(sizes, dtype=jnp.int32)])
+    starts, total = addr[:-1], int(addr[-1])
+
+    cap = store.capacity if capacity is None else int(capacity)
+    if total > cap:
+        raise ValueError(
+            f"live contents need {total} slots > capacity {cap}")
+
+    rows = read_dense(store, ranks)               # [n_slots, max_card]
+    A = jnp.full(cap, EMPTY, jnp.int32)
+    slot = jnp.arange(store.max_card, dtype=jnp.int32)[None, :]
+    pos = jnp.where(keep[:, None] & (slot < card[:, None]),
+                    starts[:, None] + slot, cap)
+    A = A.at[pos.reshape(-1)].set(rows.reshape(-1), mode="drop")
+    A = A.at[jnp.where(keep, starts + sizes - 1, cap)].set(END, mode="drop")
+
+    mgr = dataclasses.replace(
+        mgr,
+        addr0=mgr.addr0.at[idx].set(jnp.where(keep, starts, -1)),
+        cap0=mgr.cap0.at[idx].set(sizes),
+        addr1=mgr.addr1.at[idx].set(-1),
+        cap1=mgr.cap1.at[idx].set(0),
+    )
+    # ``deleted`` / ``avail`` are untouched: the free-id pool survives
+    # compaction even though the freed *blocks* do not.
+    return dataclasses.replace(
+        store, A=A, mgr=mgr, free_ptr=jnp.int32(total))
+
+
+def grow_hypergraph(
+    hg: Hypergraph,
+    *,
+    h2v_capacity: int | None = None,
+    v2h_capacity: int | None = None,
+    h2v_levels: int = 0,
+    v2h_levels: int = 0,
+) -> Hypergraph:
+    """Grow either store of the two-way pair.  ``h2v_levels`` widens the
+    hyperedge rank space (insertion Case 3 gets more dummy slots to
+    activate); ``v2h_levels`` widens the *vertex universe* — the new
+    vertex ids come up registered with lazily-allocated incident lists, so
+    ``hg.num_vertices`` grows and edges over the new ids insert normally."""
+    return Hypergraph(
+        h2v=grow_store(hg.h2v, capacity=h2v_capacity, levels=h2v_levels),
+        v2h=grow_store(hg.v2h, capacity=v2h_capacity, levels=v2h_levels,
+                       register_ranks=v2h_levels > 0),
+    )
+
+
+def compact_hypergraph(hg: Hypergraph) -> Hypergraph:
+    return Hypergraph(h2v=compact_store(hg.h2v),
+                      v2h=compact_store(hg.v2h))
+
+
+def store_stats(store: EscherStore) -> dict:
+    """Host-side allocator observability: capacity, bump-allocator level,
+    minimal (compacted) footprint, live chain count, and the fragmentation
+    ratio ``1 - live/used`` that ``run_stream(auto_grow=True)`` uses to
+    choose compaction over growth."""
+    mgr = store.mgr
+    _, idx, present, _, _, sizes = _live_layout(store)
+    live = int(jnp.sum(sizes))
+    used = int(store.free_ptr)
+    return {
+        "capacity": store.capacity,
+        "used": used,
+        "live": live,
+        "n_chained": int(jnp.sum((mgr.addr1[idx] >= 0) & present)),
+        "n_live_lists": int(jnp.sum(present.astype(jnp.int32))),
+        "rank_slots": (1 << mgr.height) - 1,
+        "ranks_used": int(store.n_ranks),
+        "fragmentation": 0.0 if used == 0 else 1.0 - live / used,
+    }

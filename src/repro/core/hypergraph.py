@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import blockmgr as bm
 from repro.core import ops
 from repro.core.store import EMPTY, EscherStore, init_store, read_dense, read_sorted
 
@@ -92,6 +93,20 @@ def from_lists(
         min_capacity)
     v2h = init_store(jnp.asarray(vlists), jnp.asarray(vcards),
                      max_edges=num_vertices, capacity=cap_v, granule=granule)
+    # the v2h tree is padded to 2^h - 1 slots and ``num_vertices`` reports
+    # that full size — register the padding ranks as zero-capacity lists
+    # (present, no block until first insert — the core/elastic.py idiom)
+    # so every vertex id the property admits is a real incident list, not
+    # a silently-invisible node
+    n_slots = (1 << v2h.mgr.height) - 1
+    if n_slots > num_vertices:
+        pad = jnp.arange(num_vertices, n_slots, dtype=jnp.int32)
+        idx = bm.cbt_index(pad, v2h.mgr.height)
+        v2h = dataclasses.replace(
+            v2h,
+            mgr=dataclasses.replace(
+                v2h.mgr, present=v2h.mgr.present.at[idx].set(1)),
+            n_ranks=jnp.int32(n_slots))
     return Hypergraph(h2v=h2v, v2h=v2h)
 
 

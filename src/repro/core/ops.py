@@ -18,7 +18,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import blockmgr as bm
-from repro.core.store import EMPTY, END, EscherStore, block_size, encode_ptr
+from repro.core.store import (
+    EMPTY, END, ERR_CAPACITY, ERR_RANKS, ERR_ROW_FULL, EscherStore,
+    block_size, encode_ptr)
 
 
 # --------------------------------------------------------------------------
@@ -100,7 +102,9 @@ def insert_hyperedges(
     alloc_start = base + offs[:-1]
     new_free = base + offs[-1]
     cap_overflow = new_free > store.capacity
-    error = store.error | jnp.int32(cap_overflow) | jnp.int32(jnp.any(rank_overflow))
+    error = (store.error
+             | jnp.int32(cap_overflow) * ERR_CAPACITY
+             | jnp.int32(jnp.any(rank_overflow)) * ERR_RANKS)
 
     a0 = jnp.where(need_fresh_primary, alloc_start, mgr.addr0[node_idx])
     c0 = jnp.where(need_fresh_primary, fresh_size, old_cap0)
@@ -136,9 +140,12 @@ def insert_hyperedges(
     tail_ok = mask[:, None] & (slot >= cards[:, None]) & (slot < (c0[:, None] - 1) + jnp.where(a1[:, None] >= 0, c1[:, None] - 1, 0))
     tail_pos = jnp.where(tail_ok, jnp.where(slot < u0, a0[:, None] + slot, a1[:, None] + (slot - u0)), store.capacity)
     A = A.at[tail_pos.reshape(-1)].set(EMPTY, mode="drop")
-    # metadata: primary end -> chain pointer or END; overflow end -> END
+    # metadata: primary end -> chain pointer or END; overflow end -> END.
+    # Zero-capacity primaries (c0 == 0: a compacted-away block, or a
+    # lazily-registered list — core/elastic.py) have no metadata slot;
+    # guard the write or ``a0 + c0 - 1 = -2`` wraps onto the tail.
     meta0 = jnp.where(a1 >= 0, encode_ptr(a1), END)
-    A = A.at[jnp.where(mask, a0 + c0 - 1, store.capacity)].set(meta0, mode="drop")
+    A = A.at[jnp.where(mask & (c0 > 0), a0 + c0 - 1, store.capacity)].set(meta0, mode="drop")
     A = A.at[jnp.where(mask & (a1 >= 0), a1 + c1 - 1, store.capacity)].set(END, mode="drop")
 
     n_ranks = store.n_ranks + jnp.sum(fresh.astype(jnp.int32))
@@ -169,7 +176,7 @@ def _write_rows(store: EscherStore, node_idx, rows, cards, mask) -> EscherStore:
     offs = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(jnp.where(need_grow, grow_size, 0), dtype=jnp.int32)])
     alloc_start = store.free_ptr + offs[:-1]
     new_free = store.free_ptr + offs[-1]
-    error = store.error | jnp.int32(new_free > store.capacity)
+    error = store.error | jnp.int32(new_free > store.capacity) * ERR_CAPACITY
 
     a1 = jnp.where(need_grow, alloc_start, a1)
     c1 = jnp.where(need_grow, grow_size, c1)
@@ -189,8 +196,10 @@ def _write_rows(store: EscherStore, node_idx, rows, cards, mask) -> EscherStore:
     ok = mask[:, None] & (slot < usable_rows_limit(c0, c1, a1)[:, None])
     pos = jnp.where(ok, pos, store.capacity)
     A = A.at[pos.reshape(-1)].set(rows.reshape(-1), mode="drop")
+    # zero-capacity primaries (c0 == 0) carry no metadata slot — see
+    # insert_hyperedges; the chain pointer lives only in the node table
     meta0 = jnp.where(a1 >= 0, encode_ptr(a1), END)
-    A = A.at[jnp.where(mask, a0 + c0 - 1, store.capacity)].set(meta0, mode="drop")
+    A = A.at[jnp.where(mask & (c0 > 0), a0 + c0 - 1, store.capacity)].set(meta0, mode="drop")
     A = A.at[jnp.where(mask & (a1 >= 0), a1 + c1 - 1, store.capacity)].set(END, mode="drop")
     return dataclasses.replace(store, A=A, mgr=mgr, free_ptr=new_free, error=error)
 
@@ -229,7 +238,8 @@ def _apply_one_round(store: EscherStore, ranks, vids, is_insert, mask):
     new_cards = cards - found.astype(jnp.int32) + can_ins.astype(jnp.int32)
     touched = mask & (found | can_ins)
     full = is_insert & mask & ~already & (cards >= max_card)
-    store = dataclasses.replace(store, error=store.error | jnp.int32(jnp.any(full)))
+    store = dataclasses.replace(
+        store, error=store.error | jnp.int32(jnp.any(full)) * ERR_ROW_FULL)
     return _write_rows(store, node_idx, rows_ins, new_cards, touched)
 
 
@@ -242,7 +252,19 @@ def apply_vertex_updates(
 ) -> EscherStore:
     """Batch horizontal update.  Updates are grouped by list id (the paper
     runs one thread per group); round r applies the r-th update of every
-    group simultaneously, looping until the deepest group drains."""
+    group simultaneously, looping until the deepest group drains.
+
+    A target outside the store's rank universe (e.g. a vertex id beyond
+    ``num_vertices`` reaching the v2h store) is masked out and sets the
+    growable ``ERR_RANKS`` bit instead of letting ``cbt_index`` scribble
+    on another list's node — ``run_stream(auto_grow=True)`` answers it by
+    growing the tree a level (vertex-universe growth, DESIGN.md §8.1)."""
+    n_univ = (1 << store.mgr.height) - 1
+    oob = mask & ((ranks < 0) | (ranks >= n_univ))
+    store = dataclasses.replace(
+        store, error=store.error | jnp.int32(jnp.any(oob)) * ERR_RANKS)
+    mask = mask & ~oob
+    ranks = jnp.clip(ranks, 0, n_univ - 1)
     m = ranks.shape[0]
     keys = jnp.where(mask, ranks, jnp.iinfo(jnp.int32).max)
     order = jnp.argsort(keys, stable=True)

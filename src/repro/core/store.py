@@ -25,6 +25,17 @@ from repro.core import blockmgr as bm
 EMPTY = jnp.iinfo(jnp.int32).max  # unoccupied vertex slot
 END = -1                          # metadata: end of list (paper's -inf)
 
+# ``EscherStore.error`` is a sticky *bitmask* (not a boolean): each failure
+# mode owns a bit so callers — the elastic layer above all
+# (core/elastic.py, stream.run_stream(auto_grow=True)) — can tell a
+# growable condition (capacity / rank space, fixable by ``grow_store``)
+# from a structural one (a row exceeding the static ``max_card``).
+# ``core/stream.py`` extends the mask with scheduler-level bits and
+# ``decode_errors`` names them all.
+ERR_CAPACITY = 1   # bump allocator ran past ``A``'s tail (grow capacity)
+ERR_RANKS = 2      # fresh ranks exhausted the perfect BST (grow a level)
+ERR_ROW_FULL = 4   # a list outgrew the static ``max_card`` (not growable)
+
 
 def encode_ptr(addr):
     """Metadata encoding of a chain pointer (must not collide with ids>=0)."""

@@ -21,7 +21,19 @@ driver (DESIGN.md §5):
 Error handling is sticky throughout: ring overflow on push, malformed
 deletes (DEL preceding its INS in the log), slot collisions (an edge
 outliving ``capacity`` subsequent events), and the stores' own overflow
-flags all fold into ``StreamState.error`` and survive the scan.
+flags all fold into ``StreamState.error`` and survive the scan.  The flag
+is a *bitmask* — one bit per failure mode (``ERROR_FLAGS``), decoded on
+the host by ``decode_errors`` together with the epoch at which each bit
+first tripped (``StreamState.error_epoch``), so a failed run reports
+*what* went wrong and *at which batch* instead of a bare int32.
+
+``run_stream(auto_grow=True)`` turns the growable subset of those errors
+(store capacity, rank space — core/elastic.py, DESIGN.md §8) into
+open-ended ingestion: the scan runs in host-checkpointed segments, a
+growable error at a segment boundary rolls the segment back, compacts
+and/or doubles the checkpointed stores, and re-runs the segment
+bit-identically — counts, dirty maps and epochs carry over because growth
+preserves every rank and every list verbatim.
 
 Shape discipline: everything is fixed-shape.  ``batch`` bounds the events
 popped per step, the same ``batch`` bounds expiry deletions per step, so the
@@ -42,13 +54,34 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import elastic as E
 from repro.core import update as U
 from repro.core.hypergraph import Hypergraph
-from repro.core.store import EMPTY
+from repro.core.store import EMPTY, ERR_CAPACITY, ERR_RANKS, ERR_ROW_FULL
 
 INS = 0
 DEL = 1
 _I32_MIN = jnp.iinfo(jnp.int32).min
+
+# Scheduler-level sticky error bits, disjoint from the store's
+# (store.ERR_CAPACITY=1 / ERR_RANKS=2 / ERR_ROW_FULL=4).
+ERR_LOG_OVERFLOW = 8      # push_events rejected events (ring full)
+ERR_MALFORMED_DEL = 16    # a DEL preceded its INS in the log (dropped)
+ERR_SLOT_COLLISION = 32   # an edge outlived ``capacity`` subsequent events
+
+ERROR_FLAGS = (
+    (ERR_CAPACITY, "store-capacity-overflow"),
+    (ERR_RANKS, "rank-space-exhausted"),
+    (ERR_ROW_FULL, "row-exceeds-max-card"),
+    (ERR_LOG_OVERFLOW, "event-log-overflow"),
+    (ERR_MALFORMED_DEL, "malformed-delete"),
+    (ERR_SLOT_COLLISION, "ring-slot-collision"),
+)
+N_ERR_BITS = len(ERROR_FLAGS)
+
+# the bits ``auto_grow`` can repair by re-sizing the stores; the rest are
+# structural (static max_card / log sizing) and stay sticky
+GROWABLE_ERRORS = ERR_CAPACITY | ERR_RANKS
 
 
 @jax.tree_util.register_dataclass
@@ -98,7 +131,8 @@ def push_events(log: EventLog, t, kind, lists, cards, ref, mask) -> EventLog:
         ref=log.ref.at[slot].set(ref, mode="drop"),
         head=log.head,
         tail=log.tail + jnp.sum(accepted.astype(jnp.int32)),
-        error=log.error | jnp.any(mask & ~accepted).astype(jnp.int32),
+        error=log.error
+        | jnp.any(mask & ~accepted).astype(jnp.int32) * ERR_LOG_OVERFLOW,
     )
     return new
 
@@ -168,7 +202,8 @@ def _pop_batch(log: EventLog, batch: int):
         t=log.t, kind=log.kind, lists=log.lists, cards=log.cards, ref=log.ref,
         head=log.head + jnp.sum(take.astype(jnp.int32)),
         tail=log.tail,
-        error=log.error | jnp.any(malformed & take).astype(jnp.int32),
+        error=log.error
+        | jnp.any(malformed & take).astype(jnp.int32) * ERR_MALFORMED_DEL,
     )
     return (t, kind, lists, cards, ref, ok), log2
 
@@ -183,7 +218,9 @@ class StreamState:
     rank_of: jax.Array  # int32[C] log slot -> live store rank, EMPTY if dead
     live_t: jax.Array   # int32[C] log slot -> timestamp of live insert
     t_now: jax.Array    # int32 scalar — stream clock (max event time seen)
-    error: jax.Array    # int32 scalar — sticky
+    error: jax.Array    # int32 scalar — sticky bitmask (ERROR_FLAGS)
+    error_epoch: jax.Array  # int32[N_ERR_BITS] — epoch each bit first
+                            # tripped, -1 = never (decode_errors)
     # --- epoch / dirty bookkeeping (query service, DESIGN.md §7) ---------
     # epoch counts applied scheduler steps; the dirty maps record, per
     # hyperedge rank / vertex id, the LAST epoch whose batch may have
@@ -212,6 +249,7 @@ def make_stream(hg: Hypergraph, log: EventLog, counts, *, times=None) -> StreamS
         rank_of=jnp.full(C, EMPTY, jnp.int32),
         live_t=jnp.full(C, EMPTY, jnp.int32),
         t_now=jnp.int32(_I32_MIN), error=jnp.int32(0),
+        error_epoch=jnp.full(N_ERR_BITS, -1, jnp.int32),
         epoch=jnp.int32(0),
         dirty_epoch=jnp.zeros(hg.n_edge_slots, jnp.int32),
         v_dirty_epoch=jnp.zeros(hg.num_vertices, jnp.int32),
@@ -374,10 +412,16 @@ def _stream_step(
         jnp.where(ins_ok, t, EMPTY), mode="drop")
 
     error = (state.error | log.error | hg.h2v.error | hg.v2h.error
-             | collide.astype(jnp.int32))
+             | collide.astype(jnp.int32) * ERR_SLOT_COLLISION)
+    # first-trip epoch per error bit (decode_errors): a bit newly present
+    # in ``error`` but not in ``state.error`` tripped at this batch
+    newly = error & ~state.error
+    bit = jnp.int32(1) << jnp.arange(N_ERR_BITS, dtype=jnp.int32)
+    error_epoch = jnp.where((newly & bit) != 0, epoch, state.error_epoch)
     return StreamState(hg=hg, counts=counts, times=times, log=log,
                        rank_of=rank_of, live_t=live_t, t_now=t_now,
-                       error=error, epoch=epoch, dirty_epoch=dirty_epoch,
+                       error=error, error_epoch=error_epoch, epoch=epoch,
+                       dirty_epoch=dirty_epoch,
                        v_dirty_epoch=v_dirty_epoch)
 
 
@@ -387,6 +431,93 @@ def _stream_step(
                      "max_region", "chunk", "window", "expiry", "backend",
                      "mesh", "track_dirty"),
 )
+def _run_stream_scan(
+    state: StreamState, *, n_steps, batch, mode, max_deg, max_nb,
+    max_region, chunk, window, expiry, v_total, backend, mesh, track_dirty,
+) -> StreamState:
+    """The jitted fixed-capacity scan core: one XLA computation threading
+    ``n_steps`` scheduler batches through the Alg. 3 single-batch step.
+    ``run_stream`` wraps it (and, with ``auto_grow``, re-dispatches it per
+    segment — capacities/heights are trace constants, so every growth is
+    one fresh specialisation)."""
+
+    def body(s, _):
+        s = _stream_step(
+            s, batch=batch, mode=mode, max_deg=max_deg, max_nb=max_nb,
+            max_region=max_region, chunk=chunk, window=window, expiry=expiry,
+            v_total=v_total, backend=backend, mesh=mesh,
+            track_dirty=track_dirty)
+        return s, None
+
+    state, _ = jax.lax.scan(body, state, None, length=n_steps)
+    return state
+
+
+def _pad_to(arr: jax.Array, n: int, fill) -> jax.Array:
+    if arr.shape[0] >= n:
+        return arr
+    return jnp.concatenate(
+        [arr, jnp.full(n - arr.shape[0], fill, arr.dtype)])
+
+
+def _compact_or_double(store, new_bits: int, max_capacity: int):
+    """One deterministic capacity repair: compact always (folds Case-2
+    chains, reclaims dead/leaked blocks), and double ``A`` unless
+    compaction alone reclaims at least a quarter of it.  Re-running the
+    same segment after a repair therefore either frees >= capacity/4 or
+    doubles — the retry loop in ``run_stream`` cannot stall."""
+    capacity = store.capacity
+    if new_bits & ERR_CAPACITY:
+        stats = E.store_stats(store)
+        if (stats["used"] - stats["live"]) * 4 < capacity:
+            capacity = min(2 * capacity, max_capacity)
+    return E.compact_store(store, capacity=capacity)
+
+
+def _repairable_bits(store, bits: int, max_capacity: int,
+                     max_height: int) -> int:
+    """The subset of ``bits`` a repair under the growth ceilings can still
+    make progress on.  A bit whose only remedy is past its ceiling is
+    demoted to non-growable — the segment is accepted with the sticky
+    error instead of doubling forever (one corrupt vertex id must cost a
+    decoded error, not an OOM)."""
+    out = 0
+    if bits & ERR_CAPACITY:
+        stats = E.store_stats(store)
+        can_reclaim = (stats["used"] - stats["live"]) * 4 >= store.capacity
+        if store.capacity < max_capacity or can_reclaim:
+            out |= ERR_CAPACITY
+    if bits & ERR_RANKS and store.mgr.height < max_height:
+        out |= ERR_RANKS
+    return out
+
+
+def _grow_checkpoint(ckpt: StreamState, h2v_bits: int, v2h_bits: int,
+                     max_capacity: int, max_height: int) -> StreamState:
+    """Repair a pre-error checkpoint so the failed segment can re-run:
+    compact/grow each store that tripped (``_compact_or_double``), then
+    pad the rank-indexed stream arrays (times / dirty maps) to the new
+    universe.  Everything else — counts, log, ring bookkeeping, epochs —
+    is untouched, which is what makes the re-run bit-identical."""
+    h2v, v2h = ckpt.hg.h2v, ckpt.hg.v2h
+    if h2v_bits & GROWABLE_ERRORS:
+        if h2v_bits & ERR_RANKS and h2v.mgr.height < max_height:
+            h2v = E.grow_store(h2v, levels=1)
+        h2v = _compact_or_double(h2v, h2v_bits, max_capacity)
+    if v2h_bits & GROWABLE_ERRORS:
+        if v2h_bits & ERR_RANKS and v2h.mgr.height < max_height:
+            # vertex universe exhausted: new ids come up registered
+            v2h = E.grow_store(v2h, levels=1, register_ranks=True)
+        v2h = _compact_or_double(v2h, v2h_bits, max_capacity)
+    hg = Hypergraph(h2v=h2v, v2h=v2h)
+    return dataclasses.replace(
+        ckpt, hg=hg,
+        times=_pad_to(ckpt.times, hg.n_edge_slots, 0),
+        dirty_epoch=_pad_to(ckpt.dirty_epoch, hg.n_edge_slots, 0),
+        v_dirty_epoch=_pad_to(ckpt.v_dirty_epoch, hg.num_vertices, 0),
+    )
+
+
 def run_stream(
     state: StreamState,
     *,
@@ -407,6 +538,18 @@ def run_stream(
                                  # (pure-ingest speed) — that map then
                                  # bumps wholesale every step, so its
                                  # point queries never cache across epochs
+    auto_grow: bool = False,     # elastic mode: segment the scan, roll a
+                                 # growable sticky error back to the last
+                                 # segment boundary, compact/grow the
+                                 # stores (core/elastic.py) and re-run
+    segment: int | None = None,  # steps per checkpointed segment
+                                 # (auto_grow only; default min(8, n_steps))
+    max_grows: int = 64,         # growth-attempt bound (recompile budget)
+    max_capacity: int = 1 << 28,  # per-store ceiling for capacity doubling
+    max_height: int = 22,         # perfect-BST height ceiling (~4M ranks)
+    grow_log: list | None = None,  # observability: one dict appended per
+                                   # repair (step, tripped bits, new
+                                   # capacities/heights) — fig21 reports it
 ) -> StreamState:
     """Scan ``n_steps`` scheduler batches through the Alg. 3 core.  One XLA
     computation end to end; counts stay exact after every step (validated in
@@ -418,6 +561,25 @@ def run_stream(
     lowerings (``"pallas"``/``"xla"``/``"bitset"``, or None to auto-select
     — kernels/ops.resolve_backend); histograms are backend-invariant
     (tests/test_backend_parity.py).
+
+    With ``auto_grow=True`` the scan becomes a segmented driver over the
+    same jitted core (DESIGN.md §8): every ``segment`` steps the sticky
+    error is read back; a segment that trips a *growable* bit (store
+    capacity / rank space — ``GROWABLE_ERRORS``) is discarded, the
+    checkpointed stores are compacted and/or doubled
+    (``elastic.compact_store`` / ``grow_store``), and the segment re-runs.
+    Because growth preserves ranks and list contents exactly and the
+    scheduler is deterministic, the resumed stream is bit-identical to one
+    pre-sized at the final capacity (tests/test_elastic.py, fig21).
+    Non-growable errors (``decode_errors`` names them) stay sticky exactly
+    as in the fixed-capacity path, and so does a growable error whose
+    repair would exceed the growth ceilings (``max_capacity`` slots per
+    store / ``max_height`` tree levels): one corrupt vertex id demanding
+    a 2^27-rank universe costs a decoded ``rank-space-exhausted`` error,
+    not an exponential doubling to OOM.  Growth re-specialises the scan,
+    so with G growth events the driver compiles O(G) times — size
+    ``segment`` against your checkpoint-read-back tolerance, not the
+    compile count.
 
     Dirty-map caveat: the maps inherit the repo-wide bound contract —
     per-row neighbourhoods truncate silently past ``max_deg``/``max_nb``
@@ -432,17 +594,79 @@ def run_stream(
         raise ValueError(
             f"batch={batch} exceeds log capacity {state.log.capacity}: "
             "two events of one batch would share a ring slot")
+    kw = dict(batch=batch, mode=mode, max_deg=max_deg, max_nb=max_nb,
+              max_region=max_region, chunk=chunk, window=window,
+              expiry=expiry, v_total=v_total, backend=backend, mesh=mesh,
+              track_dirty=track_dirty)
+    if not auto_grow:
+        return _run_stream_scan(state, n_steps=n_steps, **kw)
 
-    def body(s, _):
-        s = _stream_step(
-            s, batch=batch, mode=mode, max_deg=max_deg, max_nb=max_nb,
-            max_region=max_region, chunk=chunk, window=window, expiry=expiry,
-            v_total=v_total, backend=backend, mesh=mesh,
-            track_dirty=track_dirty)
-        return s, None
-
-    state, _ = jax.lax.scan(body, state, None, length=n_steps)
+    seg = max(1, min(segment or 8, n_steps))
+    done, grows = 0, 0
+    while done < n_steps:
+        k = min(seg, n_steps - done)
+        ckpt = state
+        out = _run_stream_scan(state, n_steps=k, **kw)
+        # only bits NEW relative to the checkpoint trigger a repair — a
+        # pre-existing sticky error is the caller's to interpret — and
+        # only while the growth ceilings leave the repair room to make
+        # progress (past them the bit is sticky, same as auto_grow=False)
+        h2v_bits = _repairable_bits(
+            ckpt.hg.h2v,
+            int(out.hg.h2v.error) & ~int(ckpt.hg.h2v.error),
+            max_capacity, max_height)
+        v2h_bits = _repairable_bits(
+            ckpt.hg.v2h,
+            int(out.hg.v2h.error) & ~int(ckpt.hg.v2h.error),
+            max_capacity, max_height)
+        if (h2v_bits | v2h_bits) & GROWABLE_ERRORS:
+            grows += 1
+            if grows > max_grows:
+                raise RuntimeError(
+                    f"auto_grow exceeded max_grows={max_grows} repairs "
+                    f"(last segment tripped h2v={h2v_bits:#x} "
+                    f"v2h={v2h_bits:#x}); raise max_grows or pre-size")
+            state = _grow_checkpoint(ckpt, h2v_bits, v2h_bits,
+                                     max_capacity, max_height)
+            if grow_log is not None:
+                grow_log.append({
+                    "epoch": int(ckpt.epoch),
+                    "step": done, "h2v_bits": h2v_bits,
+                    "v2h_bits": v2h_bits,
+                    "h2v_capacity": state.hg.h2v.capacity,
+                    "v2h_capacity": state.hg.v2h.capacity,
+                    "h2v_height": state.hg.h2v.mgr.height,
+                    "v2h_height": state.hg.v2h.mgr.height,
+                })
+            continue                      # re-run the same segment
+        state = out
+        done += k
     return state
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamError:
+    """One decoded sticky-error bit: which flag, its human name, and the
+    epoch (1-based applied-batch count) at which it first tripped —
+    ``epoch == -1`` means the bit was already set in the initial state."""
+    flag: int
+    name: str
+    epoch: int
+
+
+def decode_errors(state: StreamState) -> list[StreamError]:
+    """Host-side decoder for ``StreamState.error``: one ``StreamError`` per
+    set bit, in ``ERROR_FLAGS`` order.  An empty list means the run is
+    clean; ``state.error`` stays the cheap device-side scalar (tests can
+    still assert ``int(state.error) == 0``), this is the debugging view —
+    *which* invariant broke and *at which batch* — that a bare int32
+    cannot give."""
+    err = int(state.error)
+    if err == 0:
+        return []
+    epochs = np.asarray(state.error_epoch)
+    return [StreamError(flag=flag, name=name, epoch=int(epochs[i]))
+            for i, (flag, name) in enumerate(ERROR_FLAGS) if err & flag]
 
 
 def plan_steps(events, batch: int, *, expiry: int | None = None) -> int:

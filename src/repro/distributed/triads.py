@@ -75,6 +75,40 @@ def _replicated(tree):
     return jax.tree_util.tree_map(lambda _: P(), tree)
 
 
+def grow_replicated(
+    hg: Hypergraph,
+    *,
+    mesh: Mesh,
+    h2v_capacity: int | None = None,
+    v2h_capacity: int | None = None,
+    h2v_levels: int = 0,
+    v2h_levels: int = 0,
+    compact: bool = False,
+) -> Hypergraph:
+    """Grow (and optionally compact) the store on every device of ``mesh``
+    in lockstep (core/elastic.py, DESIGN.md §8).
+
+    The sharded engine replicates the store and shards only the probe
+    work-list, so "growing all shards" means one host-coordinated
+    ``grow_hypergraph`` followed by an explicit replicated placement: every
+    device sees the identical post-growth arrays before the next
+    ``shard_map`` launch, paying the broadcast once at growth time instead
+    of per count call.  ``run_stream(auto_grow=True, mesh=...)`` reaches
+    the same state implicitly (its host-side repair produces arrays the
+    next jitted segment re-replicates); this is the explicit front door
+    for callers managing their own store.  Sharded counts on the grown
+    store stay bit-identical to single-device
+    (tests/test_elastic.py::test_sharded_auto_grow_parity)."""
+    from repro.core import elastic as EL
+
+    if compact:
+        hg = EL.compact_hypergraph(hg)
+    hg = EL.grow_hypergraph(
+        hg, h2v_capacity=h2v_capacity, v2h_capacity=v2h_capacity,
+        h2v_levels=h2v_levels, v2h_levels=v2h_levels)
+    return jax.device_put(hg, jax.sharding.NamedSharding(mesh, P()))
+
+
 # ----------------------------------------------- hyperedge / temporal families
 
 @functools.partial(

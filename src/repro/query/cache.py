@@ -28,20 +28,28 @@ class QueryCache:
     Keys are ``(kind, key)`` where the engine passes ``key = (rank|vid,
     params)`` — ``params`` being the serve parameters the answer depends
     on (max_deg / temporal family / window for edges, max_nb / v_total
-    for vertices), so the same rank under different parameters never
-    cross-serves.  Values are whatever the engine stores (numpy
-    histograms).  ``hits`` / ``misses`` count lookups for observability
-    (fig20 reports the hit rate)."""
+    for vertices) plus the snapshot's ``shape_key`` (store capacities and
+    tree heights), so the same rank under different parameters never
+    cross-serves and entries cached before an elastic *growth*
+    (core/elastic.py, DESIGN.md §8) never serve after it.  Compaction
+    alone leaves ``shape_key`` unchanged on purpose: it is bit-exactly
+    answer-preserving (tests/test_elastic.py), so serving across it is
+    correct — that preservation is a contract compaction must keep, not
+    something this key detects.  Values are
+    whatever the engine stores (numpy histograms).  ``hits`` / ``misses``
+    count lookups for observability (fig20 reports the hit rate)."""
 
     def __init__(self, max_entries: int = 1 << 16):
         self._d: collections.OrderedDict = collections.OrderedDict()
         self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
-        # epoch-level neighbour index (engine.py): (epoch, max_deg, table).
-        # One table serves every batched edge point query at its epoch;
-        # rebuilt lazily when the served snapshot's epoch moves on.
-        self.edge_index: tuple[int, int, object] | None = None
+        # epoch-level neighbour index (engine.py):
+        # (epoch, shape_key, max_deg, table).  One table serves every
+        # batched edge point query at its epoch; rebuilt lazily when the
+        # served snapshot's epoch — or, after elastic growth, its store
+        # geometry — moves on.
+        self.edge_index: tuple[int, tuple, int, object] | None = None
 
     def __len__(self) -> int:
         return len(self._d)

@@ -86,15 +86,19 @@ def _pad_len(n: int, lo: int = 8) -> int:
 
 def _edge_index(snap, max_deg, cache):
     """Epoch-level neighbour table for batched edge point queries: built
-    once per (epoch, max_deg) and parked on the cache, so every batch at
-    this epoch pays gathers instead of the h2v∘v2h row derivation."""
+    once per (epoch, shape_key, max_deg) and parked on the cache, so every
+    batch at this epoch pays gathers instead of the h2v∘v2h row
+    derivation.  ``shape_key`` joins the key because elastic growth
+    (core/elastic.py) changes the rank universe without advancing the
+    epoch — a table built pre-growth has the wrong geometry."""
     if cache is not None and cache.edge_index is not None:
-        epoch, deg, table = cache.edge_index
-        if epoch == snap.epoch and deg == max_deg:
+        epoch, shape, deg, table = cache.edge_index
+        if (epoch == snap.epoch and shape == snap.shape_key
+                and deg == max_deg):
             return table
     table = T.neighbor_table(snap.hg, max_deg=max_deg)
     if cache is not None:
-        cache.edge_index = (snap.epoch, max_deg, table)
+        cache.edge_index = (snap.epoch, snap.shape_key, max_deg, table)
     return table
 
 
@@ -212,9 +216,14 @@ def serve(
             raise ValueError(f"unknown query kind {r.kind!r}")
 
     # the cache key carries every parameter the answer depends on; chunk /
-    # backend / mesh are excluded on purpose (bit-identical by contract)
-    edge_params = (max_deg, temporal, window if temporal else None)
-    vertex_params = (max_nb, int(vt))
+    # backend / mesh are excluded on purpose (bit-identical by contract).
+    # The snapshot's shape_key rides along so entries cached before an
+    # elastic growth (core/elastic.py) never serve after it — capacity is
+    # part of the epoch key (DESIGN.md §8).  Compaction is excluded like
+    # chunk/backend: it changes neither geometry nor answers by contract.
+    edge_params = (snap.shape_key, max_deg, temporal,
+                   window if temporal else None)
+    vertex_params = (snap.shape_key, max_nb, int(vt))
     if groups["edge"]:
         results_by_pos = _point_batch(snap, "edge", groups["edge"],
                                       edge_fn, cache, edge_params)

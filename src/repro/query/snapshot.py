@@ -50,6 +50,19 @@ class Snapshot:
     dirty_epoch: np.ndarray | None = None
     v_dirty_epoch: np.ndarray | None = None
 
+    @property
+    def shape_key(self) -> tuple[int, int, int, int]:
+        """The store geometry this snapshot was taken at: ``(h2v capacity,
+        h2v tree height, v2h capacity, v2h tree height)``.  Elastic growth
+        (core/elastic.py) preserves every rank and every answer, but it
+        changes array shapes and the rank/vertex universes — so the engine
+        folds this key into every cache key and into the epoch-level
+        neighbour index key.  Epochs alone are not enough: growth happens
+        *between* epochs (the segment re-runs from a checkpoint), so two
+        snapshots at the same epoch can disagree on geometry."""
+        return (self.hg.h2v.capacity, self.hg.h2v.mgr.height,
+                self.hg.v2h.capacity, self.hg.v2h.mgr.height)
+
     def edge_dirty(self, rank: int) -> int:
         """Last epoch at which ``rank``'s triad participation may have
         changed (0 when tracking is absent — of_graph snapshots).  Keys

@@ -103,6 +103,59 @@ def test_stream_parity():
     _assert_all_equal(results)
 
 
+def test_grown_and_compacted_store_parity():
+    """Backend parity must hold on *non-initial* layouts too (ISSUE 5): a
+    store that chained (Case-2 overflow), then grew (2x capacity, +1 tree
+    level on both stores — the bitset backend's n_bits universe resizes),
+    then compacted (chains folded, post-chain layout).  Both triad families
+    at every stage, all three backends."""
+    from repro.core import elastic as E
+
+    edges = GEN.random_hypergraph(20, V, profile="coauth", max_card=6,
+                                  seed=9, skew=0.3)
+    hg = H.from_lists(edges, num_vertices=V, max_edges=32, max_card=16,
+                      granule=8, slack=2.0)
+    hg = H.delete_hyperedges(hg, jnp.array([2, 5]), jnp.ones(2, bool))
+    nl = np.full((2, 16), EMPTY_PAD, np.int32)
+    nl[0, :12] = np.arange(12)                 # card 12 > 7 usable: chains
+    nl[1, :11] = np.arange(4, 15)
+    hg, _ = H.insert_hyperedges(hg, jnp.asarray(nl),
+                                jnp.array([12, 11], np.int32),
+                                jnp.ones(2, bool))
+    assert int(hg.h2v.error) == 0
+    assert int(jnp.sum((hg.h2v.mgr.addr1 >= 0)
+                       & (hg.h2v.mgr.present == 1))) > 0   # chained layout
+
+    grown = E.grow_hypergraph(
+        hg, h2v_capacity=2 * hg.h2v.capacity, h2v_levels=1,
+        v2h_capacity=2 * hg.v2h.capacity, v2h_levels=1)
+    compacted = E.compact_hypergraph(grown)
+    assert int(compacted.h2v.free_ptr) <= int(grown.h2v.free_ptr)
+
+    for layout in (hg, grown, compacted):
+        reg, m = T.all_live_region(layout, MAXR)
+        _assert_all_equal({
+            b: T.count_triads(layout, reg, m, max_deg=MAXD, chunk=CHUNK,
+                              backend=b)
+            for b in BACKENDS})
+        nv = layout.num_vertices
+        vids = jnp.arange(nv, dtype=jnp.int32)
+        vmask = jnp.ones(nv, bool)
+        _assert_all_equal({
+            b: VT.count_vertex_triads(layout, vids, vmask, nv,
+                                      max_nb=MAXNB, chunk=CHUNK, backend=b)
+            for b in BACKENDS})
+    # growth/compaction never change the counts themselves
+    reg, m = T.all_live_region(hg, MAXR)
+    ref = T.count_triads(hg, reg, m, max_deg=MAXD, chunk=CHUNK,
+                         backend="xla")
+    for layout in (grown, compacted):
+        reg, m = T.all_live_region(layout, MAXR)
+        got = T.count_triads(layout, reg, m, max_deg=MAXD, chunk=CHUNK,
+                             backend="xla")
+        assert (np.asarray(got) == np.asarray(ref)).all()
+
+
 def test_sharded_parity():
     """Sharded twins agree with the single-device path for every backend on
     whatever mesh this host offers (CI's distributed job widens it to 8)."""

@@ -1,0 +1,478 @@
+"""Elastic store (core/elastic.py, DESIGN.md §8): growth and compaction
+preserve every live list and every rank bit-exactly; the segmented
+``run_stream(auto_grow=True)`` driver turns a minimally-sized store into an
+open-ended one whose final state is bit-identical to a pre-sized run; and
+the sticky error bitmask decodes to (flag, batch) on the host.
+
+Regression surface called out in ISSUE 5: a Case-2 overflow chain must
+survive delete-then-reinsert block reuse, and ``compact_store`` must
+preserve ``read_sorted`` / ``dedupe_sorted`` order exactly.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as BL
+from repro.core import blockmgr as bm
+from repro.core import elastic as E
+from repro.core import hypergraph as H
+from repro.core import motifs
+from repro.core import ops
+from repro.core import stream as S
+from repro.core import triads as T
+from repro.core.store import (
+    EMPTY, ERR_CAPACITY, ERR_RANKS, dedupe_sorted, read_dense, read_sorted)
+from repro.hypergraph import generators as GEN
+
+V, MAXC, MAXD, MAXR, CHUNK = 18, 8, 16, 63, 64
+
+
+def _hg(n_edges=16, seed=0, **kw):
+    edges = GEN.random_hypergraph(n_edges, V, profile="coauth", max_card=6,
+                                  seed=seed, skew=0.3)
+    kw.setdefault("max_edges", 2 * n_edges)
+    kw.setdefault("max_card", MAXC)
+    kw.setdefault("slack", 2.0)
+    return H.from_lists(edges, num_vertices=V, **kw)
+
+
+def _insert(hg, members, max_card=None):
+    mc = max_card or hg.h2v.max_card
+    nl = np.full((1, mc), EMPTY, np.int32)
+    nl[0, : len(members)] = sorted(members)
+    return H.insert_hyperedges(hg, jnp.asarray(nl),
+                               jnp.asarray([len(members)], np.int32),
+                               jnp.ones(1, bool))
+
+
+def _chained_hg():
+    """A hypergraph holding one Case-2 chained block: delete a small edge,
+    reinsert a big one into its freed (too small) primary."""
+    hg = _hg(6, max_card=16, granule=8)
+    hg = H.delete_hyperedges(hg, jnp.array([1]), jnp.ones(1, bool))
+    hg, ranks = _insert(hg, list(range(2, 14)))          # card 12 > 7 usable
+    assert int(ranks[0]) == 1
+    idx = int(bm.cbt_index(jnp.int32(1), hg.h2v.mgr.height))
+    assert int(hg.h2v.mgr.addr1[idx]) >= 0               # chain exists
+    assert int(hg.h2v.error) == 0
+    return hg
+
+
+# ------------------------------------------------------------------ growth
+def test_grow_preserves_reads_ranks_and_counts():
+    hg = _chained_hg()
+    n = hg.n_edge_slots
+    before = np.asarray(read_dense(hg.h2v, jnp.arange(n)))
+    counts0 = BL.mochy_static(hg, max_deg=MAXD, max_region=MAXR, chunk=CHUNK)
+
+    grown = E.grow_hypergraph(
+        hg, h2v_capacity=2 * hg.h2v.capacity, h2v_levels=1,
+        v2h_capacity=2 * hg.v2h.capacity)
+    assert grown.h2v.capacity == 2 * hg.h2v.capacity
+    assert grown.h2v.mgr.height == hg.h2v.mgr.height + 1
+    assert grown.n_edge_slots == 2 * n + 1
+    after = np.asarray(read_dense(grown.h2v, jnp.arange(n)))
+    assert (before == after).all()                        # ranks stable
+    counts1 = BL.mochy_static(grown, max_deg=MAXD, max_region=MAXR,
+                              chunk=CHUNK)
+    assert (np.asarray(counts0) == np.asarray(counts1)).all()
+    # the added rank space is dummy (not present) until Case 3 activates it
+    assert int(grown.h2v.n_live) == int(hg.h2v.n_live)
+
+
+def test_grow_tree_then_insert_uses_new_rank_space():
+    hg = _hg(6, max_edges=7, granule=8)                   # height 3: 7 slots
+    # exhaust the fresh-rank space: 6 used, 1 left
+    hg, _ = _insert(hg, [0, 1])
+    st, ranks = ops.insert_hyperedges(
+        hg.h2v,
+        jnp.full((1, MAXC), EMPTY, jnp.int32).at[0, :2].set(jnp.array([2, 3])),
+        jnp.asarray([2], np.int32), jnp.ones(1, bool))
+    assert int(st.error) & ERR_RANKS                      # 8th edge: no slot
+    grown = E.grow_hypergraph(hg, h2v_levels=1,
+                              h2v_capacity=2 * hg.h2v.capacity)
+    grown, ranks = _insert(grown, [2, 3])
+    assert int(ranks[0]) == 7                             # first new rank
+    assert int(grown.h2v.error) == 0
+
+
+def test_grow_vertex_universe_registers_new_ids():
+    hg = _hg(6)
+    nv = hg.num_vertices
+    grown = E.grow_hypergraph(hg, v2h_levels=1,
+                              v2h_capacity=2 * hg.v2h.capacity)
+    assert grown.num_vertices == 2 * nv + 1
+    # an edge over brand-new vertex ids inserts cleanly, two-way
+    vids = [nv + 1, nv + 3, 2 * nv - 1]
+    grown, ranks = _insert(grown, vids)
+    assert int(grown.h2v.error) == 0 and int(grown.v2h.error) == 0
+    got = np.asarray(read_dense(grown.h2v, ranks))
+    assert sorted(got[got != EMPTY].tolist()) == sorted(vids)
+    back = np.asarray(read_dense(grown.v2h, jnp.asarray(vids)))
+    assert all(int(ranks[0]) in row[row != EMPTY].tolist() for row in back)
+
+
+def test_grow_register_ranks_does_not_resurrect_deleted():
+    """Regression (review finding): vertex-universe growth registers only
+    never-used ranks — a deleted rank must stay in the Case-1 free pool,
+    not come back to life with its stale pre-delete contents."""
+    hg = _hg(6)
+    # delete a v2h rank through the same vertical path h2v uses
+    st = ops.delete_hyperedges(hg.v2h, jnp.array([3]), jnp.ones(1, bool))
+    hg = H.Hypergraph(h2v=hg.h2v, v2h=st)
+    avail_before = int(st.mgr.root_avail)
+    grown = E.grow_hypergraph(hg, v2h_levels=1,
+                              v2h_capacity=2 * hg.v2h.capacity)
+    g = grown.v2h
+    idx = int(bm.cbt_index(jnp.int32(3), g.mgr.height))
+    assert int(g.mgr.present[idx]) == 0          # still dead
+    assert int(g.mgr.deleted[idx]) == 1          # still reusable
+    assert int(g.mgr.root_avail) == avail_before
+    row = np.asarray(read_dense(g, jnp.array([3])))[0]
+    assert (row == EMPTY).all()                  # no stale contents served
+
+
+def test_grow_store_rejects_shrink():
+    hg = _hg(4)
+    with pytest.raises(ValueError):
+        E.grow_store(hg.h2v, capacity=hg.h2v.capacity // 2)
+
+
+# -------------------------------------------------------------- compaction
+def test_compact_preserves_read_sorted_and_dedupe_sorted():
+    hg = _chained_hg()
+    n = hg.n_edge_slots
+    ranks = jnp.arange(n)
+    dense0 = np.asarray(read_dense(hg.h2v, ranks))
+    sorted0 = np.asarray(read_sorted(hg.h2v, ranks))
+    dedup0 = np.asarray(dedupe_sorted(read_dense(hg.h2v, ranks)))
+
+    cs = E.compact_store(hg.h2v)
+    assert (np.asarray(read_dense(cs, ranks)) == dense0).all()
+    assert (np.asarray(read_sorted(cs, ranks)) == sorted0).all()
+    assert (np.asarray(dedupe_sorted(read_dense(cs, ranks))) == dedup0).all()
+    # chains folded into right-sized primaries; metadata slots maintained
+    idx = bm.cbt_index(ranks, cs.mgr.height)
+    assert (np.asarray(cs.mgr.addr1[idx]) < 0).all()
+    a0 = np.asarray(cs.mgr.addr0[idx])
+    c0 = np.asarray(cs.mgr.cap0[idx])
+    live = np.asarray(cs.mgr.present[idx]) == 1
+    A = np.asarray(cs.A)
+    for s, c in zip(a0[live], c0[live]):
+        assert A[s + c - 1] == -1                         # END metadata
+
+
+def test_compact_reclaims_leaked_overflow_tail():
+    """Horizontal regrowth leaks replaced overflow blocks (documented trade
+    in ops._write_rows); compaction gets the slots back."""
+    hg = H.from_lists([[0, 1, 2], [3, 4], [5, 6, 7]], num_vertices=V,
+                      max_edges=8, max_card=16, granule=8, slack=4.0)
+    # push edge 0 from card 3 to 15: the first overflow (8 slots, usable 7,
+    # total 14) is outgrown at card 15 and _write_rows replaces it, leaking
+    # the old block — the documented bump-allocator trade
+    for v in range(3, 15):
+        hg = H.apply_vertex_updates(hg, jnp.array([0]), jnp.array([v]),
+                                    jnp.array([True]), jnp.ones(1, bool))
+    assert int(hg.h2v.error) == 0
+    stats = E.store_stats(hg.h2v)
+    assert stats["used"] > stats["live"]                  # leak exists
+    cs = E.compact_store(hg.h2v)
+    stats2 = E.store_stats(cs)
+    assert stats2["used"] == stats2["live"] < stats["used"]
+    assert int(cs.free_ptr) < int(hg.h2v.free_ptr)
+
+
+def test_case2_chain_survives_delete_then_reinsert_reuse():
+    """Regression (ISSUE 5): delete a chained edge, reinsert into the freed
+    node — Case-1 reuse must see the chain capacity and the read must
+    follow the chain, before and after compaction."""
+    hg = _chained_hg()
+    # delete the chained edge, reinsert something that still needs a chain
+    hg = H.delete_hyperedges(hg, jnp.array([1]), jnp.ones(1, bool))
+    big2 = list(range(20, 31))                            # card 11 -> chained
+    hg, ranks = _insert(hg, big2)
+    assert int(ranks[0]) == 1                             # same node reused
+    assert int(hg.h2v.error) == 0
+    got = np.asarray(read_dense(hg.h2v, ranks))
+    assert sorted(got[got != EMPTY].tolist()) == big2
+
+    # again, with a compaction between delete and reinsert: the freed node
+    # is stripped to zero capacity and reuse allocates fresh (chain path)
+    hg = H.delete_hyperedges(hg, jnp.array([1]), jnp.ones(1, bool))
+    hg = H.Hypergraph(h2v=E.compact_store(hg.h2v), v2h=hg.v2h)
+    hg, ranks = _insert(hg, big2)
+    assert int(ranks[0]) == 1
+    assert int(hg.h2v.error) == 0
+    got = np.asarray(read_dense(hg.h2v, ranks))
+    assert sorted(got[got != EMPTY].tolist()) == big2
+
+
+# ------------------------------------------------------------ decode_errors
+def test_decode_errors_names_flag_and_batch():
+    hg = H.from_lists([], num_vertices=V, max_edges=4, max_card=MAXC,
+                      max_vdeg=8, granule=8, slack=1.0)   # 8-slot h2v
+    events = GEN.event_stream(12, V, seed=7, max_card=5, insert_frac=1.0)
+    log = S.log_from_events(events, max_card=MAXC)
+    st = S.make_stream(hg, log, jnp.zeros(motifs.NUM_CLASSES, jnp.int32))
+    st = S.run_stream(st, n_steps=6, batch=2, mode="edge", max_deg=MAXD,
+                      max_region=MAXR, chunk=CHUNK)       # no auto_grow
+    assert int(st.error) != 0
+    errs = S.decode_errors(st)
+    names = {e.name for e in errs}
+    assert "store-capacity-overflow" in names
+    by_name = {e.name: e for e in errs}
+    cap = by_name["store-capacity-overflow"]
+    assert cap.flag == ERR_CAPACITY
+    assert 1 <= cap.epoch <= 6                            # which batch
+    # clean runs decode to nothing
+    assert S.decode_errors(
+        S.make_stream(hg, log, jnp.zeros(motifs.NUM_CLASSES, jnp.int32))) == []
+
+
+# ------------------------------------------------- auto_grow segmented scan
+def _stream_events(n=28, seed=5):
+    return GEN.event_stream(n, V, seed=seed, max_card=5, insert_frac=0.85)
+
+
+def _run_events(hg0, events, *, auto_grow, segment=2, batch=4, **kw):
+    steps = S.plan_steps(events, batch)
+    log = S.log_from_events(events, max_card=MAXC)
+    st = S.make_stream(hg0, log, kw.pop("counts0"))
+    return S.run_stream(st, n_steps=steps, batch=batch, max_deg=MAXD,
+                        max_region=MAXR, chunk=CHUNK, auto_grow=auto_grow,
+                        segment=segment, **kw)
+
+
+def test_auto_grow_matches_presized_bit_identically():
+    """The acceptance contract: a stream started at minimal capacity grows
+    >= 8x under ``auto_grow`` and its final state — counts, epoch, dirty
+    maps, live set — is bit-identical to a run pre-sized to the final
+    capacity (fig21 measures the same at benchmark scale)."""
+    events = _stream_events()
+    tiny = H.from_lists([], num_vertices=V, max_edges=4, max_card=MAXC,
+                        max_vdeg=16, granule=8, slack=1.0)
+    cap0 = tiny.h2v.capacity
+    zeros = jnp.zeros(motifs.NUM_CLASSES, jnp.int32)
+    st = _run_events(tiny, events, auto_grow=True, mode="edge",
+                     counts0=zeros)
+    assert int(st.error) == 0, S.decode_errors(st)
+    assert int(st.log.n_pending) == 0
+    assert st.hg.h2v.capacity >= 8 * cap0                 # real growth
+    assert st.hg.h2v.mgr.height > tiny.h2v.mgr.height     # tree grew too
+
+    big = H.from_lists([], num_vertices=V, max_edges=st.hg.n_edge_slots,
+                       max_card=MAXC, max_vdeg=16, granule=8,
+                       min_capacity=max(st.hg.h2v.capacity,
+                                        st.hg.v2h.capacity))
+    ref = _run_events(big, events, auto_grow=False, mode="edge",
+                      counts0=zeros)
+    assert int(ref.error) == 0
+    assert (np.asarray(st.counts) == np.asarray(ref.counts)).all()
+    assert int(st.epoch) == int(ref.epoch)
+    assert H.to_python(st.hg) == H.to_python(ref.hg)
+    n = min(st.dirty_epoch.shape[0], ref.dirty_epoch.shape[0])
+    assert (np.asarray(st.dirty_epoch[:n])
+            == np.asarray(ref.dirty_epoch[:n])).all()
+    # and the maintained histogram matches a from-scratch recount
+    recount = BL.mochy_static(st.hg, max_deg=MAXD, max_region=MAXR,
+                              chunk=CHUNK)
+    assert (np.asarray(st.counts) == np.asarray(recount)).all()
+
+
+def test_auto_grow_temporal_expiry_reaches_steady_state():
+    """Temporal mode with a retention window on a tiny store: expiry keeps
+    the live set bounded while capacity grows only as far as fragmentation
+    demands (compaction folds reclaimed space back in)."""
+    events = GEN.event_stream(30, V, seed=11, max_card=5, insert_frac=0.9,
+                              max_dt=3)
+    tiny = H.from_lists([], num_vertices=V, max_edges=8, max_card=MAXC,
+                        max_vdeg=16, granule=8, slack=1.0)
+    steps = S.plan_steps(events, 4, expiry=20)
+    log = S.log_from_events(events, max_card=MAXC)
+    st = S.make_stream(tiny, log, jnp.zeros(motifs.NUM_TEMPORAL, jnp.int32))
+    st = S.run_stream(st, n_steps=steps, batch=4, mode="temporal",
+                      max_deg=MAXD, max_region=MAXR, chunk=CHUNK,
+                      window=25, expiry=20, auto_grow=True, segment=2)
+    assert int(st.error) == 0, S.decode_errors(st)
+    assert int(st.log.n_pending) == 0
+    ref = BL.thyme_static(st.hg, st.times, 25, max_deg=MAXD,
+                          max_region=MAXR, chunk=CHUNK)
+    assert (np.asarray(st.counts) == np.asarray(ref)).all()
+
+
+def test_auto_grow_vertex_mode_matches_recount():
+    events = GEN.event_stream(22, V, seed=13, max_card=5, insert_frac=0.8)
+    tiny = H.from_lists([], num_vertices=V, max_edges=4, max_card=MAXC,
+                        max_vdeg=16, granule=8, slack=1.0)
+    steps = S.plan_steps(events, 4)
+    log = S.log_from_events(events, max_card=MAXC)
+    st = S.make_stream(tiny, log, jnp.zeros(3, jnp.int32))
+    st = S.run_stream(st, n_steps=steps, batch=4, mode="vertex", max_nb=32,
+                      max_region=MAXR, chunk=CHUNK, v_total=V,
+                      auto_grow=True, segment=2)
+    assert int(st.error) == 0, S.decode_errors(st)
+    ref = BL.stathyper_static(st.hg, V, max_nb=32, max_region=V, chunk=CHUNK)
+    assert (np.asarray(st.counts) == np.asarray(ref)).all()
+
+
+def test_auto_grow_vertex_universe_from_out_of_range_vids():
+    """Regression (review finding): an event whose vertex ids exceed the
+    store's universe must trip the growable ERR_RANKS bit on v2h (not
+    silently corrupt another vertex's bookkeeping), and auto_grow must
+    answer it by widening the vertex universe until the ids fit."""
+    events = [(t, "ins", [t % 5, (t + 1) % 5 + 5, 12 + (t % 9)])
+              for t in range(10)]                    # vids up to 20
+    small = H.from_lists([], num_vertices=7, max_edges=16, max_card=MAXC,
+                         max_vdeg=16, granule=8, slack=1.0,
+                         min_capacity=1024)          # universe: 7 vertices
+    zeros = jnp.zeros(motifs.NUM_CLASSES, jnp.int32)
+
+    # fixed-capacity path: sticky growable bit, decoded by name
+    st0 = _run_events(small, events, auto_grow=False, mode="edge",
+                      counts0=zeros)
+    assert int(st0.error) & ERR_RANKS
+    assert "rank-space-exhausted" in {e.name for e in S.decode_errors(st0)}
+
+    st = _run_events(small, events, auto_grow=True, mode="edge",
+                     counts0=zeros)
+    assert int(st.error) == 0, S.decode_errors(st)
+    assert st.hg.num_vertices >= 21                  # universe grew to fit
+    ref = BL.mochy_static(st.hg, max_deg=MAXD, max_region=MAXR, chunk=CHUNK)
+    assert (np.asarray(st.counts) == np.asarray(ref)).all()
+    assert H.to_python(st.hg) == {
+        r: set(e[2]) for r, e in enumerate(events)}
+
+
+def test_tree_padding_vids_are_real_vertices():
+    """Regression (review finding): ``num_vertices`` reports the padded
+    tree size (2^h - 1), so vids in [requested, 2^h - 1) must behave as
+    registered vertices — full two-way duality, not silently-invisible
+    nodes that pass the in-universe guard."""
+    hg = H.from_lists([[0, 1, 2]], num_vertices=18, max_edges=8,
+                      max_card=MAXC, granule=8, slack=2.0,
+                      min_capacity=1024)
+    assert hg.num_vertices == 31                     # padded universe
+    hg, ranks = _insert(hg, [20, 25, 30])            # gap vids
+    assert int(hg.h2v.error) == 0 and int(hg.v2h.error) == 0
+    r = int(ranks[0])
+    back = np.asarray(read_dense(hg.v2h, jnp.array([20, 25, 30])))
+    assert all(r in row[row != EMPTY].tolist() for row in back)
+    # the duality holds through delete too
+    hg = H.delete_hyperedges(hg, ranks, jnp.ones(1, bool))
+    back = np.asarray(read_dense(hg.v2h, jnp.array([20, 25, 30])))
+    assert (back == EMPTY).all()
+    # and neighbors() sees adjacency through a gap vid
+    hg, ra = _insert(hg, [4, 5, 20])
+    hg, rb = _insert(hg, [20, 6, 7])
+    nb = np.asarray(H.neighbors(hg, ra, 4))[0]
+    assert int(rb[0]) in nb.tolist()                 # linked via vertex 20
+
+
+def test_auto_grow_ceilings_degrade_to_sticky_error():
+    """Regression (review finding): a garbage vertex id that would demand
+    an absurd universe must cost a decoded rank-space error under the
+    growth ceilings — not exponential doubling until OOM."""
+    events = [(0, "ins", [0, 1, 2]), (1, "ins", [1, 2, 1_000_000]),
+              (2, "ins", [2, 3, 4])]
+    small = H.from_lists([], num_vertices=7, max_edges=16, max_card=MAXC,
+                         max_vdeg=16, granule=8, slack=1.0,
+                         min_capacity=1024)
+    log = S.log_from_events(events, max_card=MAXC, capacity=8)
+    st = S.make_stream(small, log, jnp.zeros(motifs.NUM_CLASSES, jnp.int32))
+    st = S.run_stream(st, n_steps=3, batch=4, mode="edge", max_deg=MAXD,
+                      max_region=MAXR, chunk=CHUNK, auto_grow=True,
+                      segment=1, max_height=6)       # universe cap: 63
+    assert st.hg.v2h.mgr.height <= 6                 # no runaway doubling
+    assert "rank-space-exhausted" in {e.name for e in S.decode_errors(st)}
+
+
+def test_auto_grow_does_not_mask_nongrowable_errors():
+    """A malformed delete is structural: auto_grow must not retry it away —
+    the sticky bit survives with its batch number."""
+    hg = H.from_lists([], num_vertices=V, max_edges=64, max_card=MAXC,
+                      max_vdeg=32, min_capacity=2048)
+    bad = [(0, "del", 1), (1, "ins", [0, 1, 2]), (2, "ins", [2, 3, 4])]
+    log = S.log_from_events(bad, max_card=MAXC, capacity=8)
+    st = S.make_stream(hg, log, jnp.zeros(motifs.NUM_CLASSES, jnp.int32))
+    st = S.run_stream(st, n_steps=2, batch=4, mode="edge", max_deg=MAXD,
+                      max_region=MAXR, chunk=CHUNK, auto_grow=True,
+                      segment=1)
+    errs = S.decode_errors(st)
+    assert [e.name for e in errs] == ["malformed-delete"]
+    assert errs[0].epoch == 1
+    assert int(st.hg.h2v.n_live) == 2                     # inserts applied
+
+
+def test_sharded_auto_grow_parity():
+    """distributed lockstep: the sharded auto_grow stream and an explicit
+    ``grow_replicated`` store agree bit-identically with single-device."""
+    from repro.distributed import triads as DT
+
+    mesh = DT.count_mesh(min(4, len(jax.devices())))
+    events = _stream_events(n=20, seed=17)
+    zeros = jnp.zeros(motifs.NUM_CLASSES, jnp.int32)
+
+    def run(mesh_):
+        tiny = H.from_lists([], num_vertices=V, max_edges=4, max_card=MAXC,
+                            max_vdeg=16, granule=8, slack=1.0)
+        return _run_events(tiny, events, auto_grow=True, mode="edge",
+                           counts0=zeros, mesh=mesh_)
+
+    single, sharded = run(None), run(mesh)
+    assert int(single.error) == 0 and int(sharded.error) == 0
+    assert (np.asarray(single.counts) == np.asarray(sharded.counts)).all()
+    assert single.hg.h2v.capacity == sharded.hg.h2v.capacity
+
+    grown = DT.grow_replicated(
+        single.hg, mesh=mesh, h2v_capacity=2 * single.hg.h2v.capacity,
+        h2v_levels=1, compact=True)
+    reg, m = T.all_live_region(grown, MAXR)
+    ref = T.count_triads(grown, reg, m, max_deg=MAXD, chunk=CHUNK)
+    got = DT.count_triads_sharded(grown, reg, m, mesh=mesh, max_deg=MAXD,
+                                  chunk=CHUNK)
+    assert (np.asarray(got) == np.asarray(ref)).all()
+
+
+# ----------------------------------------------- query service across growth
+def test_snapshot_cache_invalidates_across_growth():
+    """Growth preserves answers but changes geometry: the cache must miss
+    (shape_key) rather than serve through a stale neighbour index, and the
+    re-served answers must equal the pre-growth ones."""
+    from repro import query
+
+    events = _stream_events(n=24, seed=19)
+    tiny = H.from_lists([], num_vertices=V, max_edges=4, max_card=MAXC,
+                        max_vdeg=16, granule=8, slack=1.0)
+    st = _run_events(tiny, events, auto_grow=True, mode="edge",
+                     counts0=jnp.zeros(motifs.NUM_CLASSES, jnp.int32))
+    assert int(st.error) == 0
+
+    snap1 = query.of_stream(st)
+    cache = query.QueryCache()
+    live = np.asarray(st.hg.h2v.mgr.hid)[
+        np.asarray(st.hg.h2v.mgr.present) == 1]
+    reqs = [query.triads_containing_edge(int(r)) for r in live[:4]]
+    ans1 = query.serve(snap1, reqs, max_deg=MAXD, chunk=CHUNK, cache=cache)
+    miss1 = cache.misses
+
+    grown = E.grow_hypergraph(st.hg, h2v_capacity=2 * st.hg.h2v.capacity,
+                              h2v_levels=1)
+    st2 = dataclasses.replace(
+        st, hg=grown,
+        times=S._pad_to(st.times, grown.n_edge_slots, 0),
+        dirty_epoch=S._pad_to(st.dirty_epoch, grown.n_edge_slots, 0))
+    snap2 = query.of_stream(st2)
+    assert snap2.shape_key != snap1.shape_key
+    ans2 = query.serve(snap2, reqs, max_deg=MAXD, chunk=CHUNK, cache=cache)
+    assert cache.misses == 2 * miss1          # stale entries did not serve
+    for a, b in zip(ans1, ans2):
+        assert (a == b).all()                 # growth preserved the answers
+    # same snapshot again: now it caches
+    hits0 = cache.hits
+    ans3 = query.serve(snap2, reqs, max_deg=MAXD, chunk=CHUNK, cache=cache)
+    assert cache.hits > hits0
+    for a, b in zip(ans2, ans3):
+        assert (a == b).all()

@@ -1,0 +1,321 @@
+"""Stateful differential fuzz suite for the elastic ESCHER store (ISSUE 5).
+
+A state machine drives the full dynamic surface — hyperedge insert/delete,
+incident-vertex insert/delete, elastic growth (capacity, rank space,
+vertex universe) and compaction — against a pure-Python dict-of-sets
+oracle.  After every rule the device store must agree with the oracle
+*exactly*: ``read_dense``/``read_sorted`` contents of both mappings (h2v
+and its v2h dual), live-rank sets, and a zero sticky error bitmask; at
+checkpoints the device triad histogram must equal the host MoCHy recount
+of the oracle.
+
+Two drivers share one model:
+
+  * ``hypothesis`` ``RuleBasedStateMachine`` (CI: requirements-dev.txt
+    installs hypothesis) — shrinking finds minimal counterexamples;
+  * a seeded random driver that runs everywhere hypothesis is absent, so
+    the differential suite is never silently skipped.
+
+Either way the suite runs >= 200 examples in the fast tier
+(``ESCHER_FUZZ_EXAMPLES`` overrides).  Ops go through jitted wrappers with
+fixed batch shapes: the jit cache persists across examples, so the compile
+universe is bounded by the handful of (capacity, height) combinations the
+growth rules can reach.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as BL
+from repro.core import elastic as E
+from repro.core import hypergraph as H
+from repro.core import triads as T
+from repro.core.store import EMPTY, read_dense
+
+try:
+    import hypothesis
+    from hypothesis import strategies as st
+    from hypothesis.stateful import (
+        RuleBasedStateMachine, initialize, invariant, rule)
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+N_EXAMPLES = int(os.environ.get("ESCHER_FUZZ_EXAMPLES", "200"))
+STEPS = 8                 # rules per example
+
+V0 = 15                   # initial vertex universe (v2h height 4)
+MAXC = 6                  # hyperedge cardinality bound (h2v max_card)
+MAXVD = 10                # vertex degree bound (v2h max_card)
+GRANULE = 8
+MAXD, MAXR, CHUNK = 16, 63, 64
+MAX_LEVEL_GROWS = 1       # per store per example: bounds the jit universe
+
+_jit_insert = jax.jit(H.insert_hyperedges)
+_jit_delete = jax.jit(H.delete_hyperedges)
+_jit_vupdate = jax.jit(H.apply_vertex_updates)
+_ONE = jnp.ones(1, bool)
+
+
+class ElasticModel:
+    """The differential system under test: a two-way ESCHER hypergraph plus
+    its dict-of-sets oracle, advanced in lockstep.  Rules are total — an
+    op whose precondition fails returns False (the drivers just move on),
+    and an op that would exhaust capacity grows the store first, which is
+    precisely the elastic behaviour under fuzz."""
+
+    def __init__(self):
+        self.hg = H.from_lists(
+            [], num_vertices=V0, max_edges=7, max_card=MAXC,
+            max_vdeg=MAXVD, granule=GRANULE, slack=1.0, min_capacity=64)
+        self.oracle: dict[int, set[int]] = {}
+        self.vdeg: dict[int, int] = {}
+        self.h2v_level_grows = 0
+        self.v2h_level_grows = 0
+
+    # ------------------------------------------------------------- helpers
+    def live_ranks(self):
+        return sorted(self.oracle)
+
+    def _is_dup(self, vs: set) -> bool:
+        return any(vs == s for s in self.oracle.values())
+
+    def _ensure_h2v_space(self):
+        """Grow before an insert that could overflow — capacity (worst case
+        primary + replacement overflow) and rank space (no free node and no
+        fresh rank left)."""
+        h2v = self.hg.h2v
+        worst = 4 * GRANULE
+        if int(h2v.free_ptr) + worst > h2v.capacity:
+            self.hg = E.grow_hypergraph(
+                self.hg, h2v_capacity=2 * h2v.capacity)
+        mgr = self.hg.h2v.mgr
+        if (int(mgr.root_avail) == 0
+                and int(self.hg.h2v.n_ranks) >= (1 << mgr.height) - 1):
+            self.hg = E.grow_hypergraph(self.hg, h2v_levels=1)
+            self.h2v_level_grows += 1
+
+    def _ensure_v2h_space(self, n_members: int):
+        v2h = self.hg.v2h
+        worst = n_members * 2 * GRANULE
+        if int(v2h.free_ptr) + worst > v2h.capacity:
+            self.hg = E.grow_hypergraph(
+                self.hg, v2h_capacity=2 * v2h.capacity)
+
+    # --------------------------------------------------------------- rules
+    def op_insert(self, vs: list[int]) -> bool:
+        vs = sorted(set(v for v in vs if v < self.hg.num_vertices))
+        if not 2 <= len(vs) <= MAXC or self._is_dup(set(vs)):
+            return False
+        if any(self.vdeg.get(v, 0) >= MAXVD for v in vs):
+            return False
+        self._ensure_h2v_space()
+        self._ensure_v2h_space(len(vs))
+        nl = np.full((1, MAXC), EMPTY, np.int32)
+        nl[0, : len(vs)] = vs
+        self.hg, ranks = _jit_insert(
+            self.hg, jnp.asarray(nl), jnp.asarray([len(vs)], np.int32), _ONE)
+        r = int(ranks[0])
+        assert r >= 0 and r not in self.oracle
+        self.oracle[r] = set(vs)
+        for v in vs:
+            self.vdeg[v] = self.vdeg.get(v, 0) + 1
+        return True
+
+    def op_delete(self, choice: int) -> bool:
+        live = self.live_ranks()
+        if not live:
+            return False
+        r = live[choice % len(live)]
+        self.hg = _jit_delete(self.hg, jnp.asarray([r], np.int32), _ONE)
+        for v in self.oracle.pop(r):
+            self.vdeg[v] -= 1
+        return True
+
+    def op_vertex_update(self, choice: int, vid: int, insert: bool) -> bool:
+        live = self.live_ranks()
+        if not live:
+            return False
+        r = live[choice % len(live)]
+        vid = vid % self.hg.num_vertices
+        cur = self.oracle[r]
+        if insert:
+            if (vid in cur or len(cur) >= MAXC
+                    or self.vdeg.get(vid, 0) >= MAXVD
+                    or self._is_dup(cur | {vid})):
+                return False
+        else:
+            if vid not in cur or len(cur) <= 2 or self._is_dup(cur - {vid}):
+                return False
+        self._ensure_v2h_space(1)
+        self._ensure_h2v_space()
+        self.hg = _jit_vupdate(
+            self.hg, jnp.asarray([r], np.int32), jnp.asarray([vid], np.int32),
+            jnp.asarray([insert]), _ONE)
+        if insert:
+            cur.add(vid)
+            self.vdeg[vid] = self.vdeg.get(vid, 0) + 1
+        else:
+            cur.discard(vid)
+            self.vdeg[vid] -= 1
+        return True
+
+    def op_grow(self, which: int) -> bool:
+        hg = self.hg
+        if which == 0:
+            self.hg = E.grow_hypergraph(hg, h2v_capacity=2 * hg.h2v.capacity)
+        elif which == 1:
+            self.hg = E.grow_hypergraph(hg, v2h_capacity=2 * hg.v2h.capacity)
+        elif which == 2:
+            if self.h2v_level_grows >= MAX_LEVEL_GROWS:
+                return False
+            self.hg = E.grow_hypergraph(hg, h2v_levels=1)
+            self.h2v_level_grows += 1
+        else:
+            if self.v2h_level_grows >= MAX_LEVEL_GROWS:
+                return False
+            self.hg = E.grow_hypergraph(
+                hg, v2h_levels=1, v2h_capacity=2 * hg.v2h.capacity)
+            self.v2h_level_grows += 1
+        return True
+
+    def op_compact(self) -> bool:
+        self.hg = E.compact_hypergraph(self.hg)
+        return True
+
+    # -------------------------------------------------------------- checks
+    def check_store(self):
+        """The per-rule invariant: zero sticky errors and exact h2v + v2h
+        agreement with the oracle (read_dense drives read_sorted, so row
+        contents cover both)."""
+        assert int(self.hg.h2v.error) == 0, "h2v sticky error"
+        assert int(self.hg.v2h.error) == 0, "v2h sticky error"
+        assert H.to_python(self.hg) == self.oracle
+        # the dual mapping: vertex -> set of incident live ranks
+        nv = self.hg.num_vertices
+        rows = np.asarray(read_dense(self.hg.v2h, jnp.arange(nv)))
+        want: dict[int, set[int]] = {}
+        for r, vs in self.oracle.items():
+            for v in vs:
+                want.setdefault(v, set()).add(r)
+        for v in range(nv):
+            got = set(rows[v][rows[v] != EMPTY].tolist())
+            assert got == want.get(v, set()), f"v2h[{v}]: {got}"
+
+    def check_histogram(self):
+        ref = BL.mochy_cpu([set(s) for s in self.oracle.values()])
+        reg, m = T.all_live_region(self.hg, MAXR)
+        got = T.count_triads(self.hg, reg, m, max_deg=MAXD, chunk=CHUNK)
+        assert (np.asarray(got).astype(np.int64) == ref).all(), (
+            f"histogram diverged: {np.asarray(got)} vs {ref}")
+
+
+def _drive(model: ElasticModel, ops: list[tuple]):
+    """Apply a decoded op list; shared by both drivers."""
+    for op in ops:
+        kind = op[0]
+        if kind == "ins":
+            model.op_insert(op[1])
+        elif kind == "del":
+            model.op_delete(op[1])
+        elif kind == "vup":
+            model.op_vertex_update(op[1], op[2], op[3])
+        elif kind == "grow":
+            model.op_grow(op[1])
+        elif kind == "compact":
+            model.op_compact()
+        model.check_store()
+
+
+def _random_ops(rng: np.random.Generator, n_steps: int) -> list[tuple]:
+    ops: list[tuple] = []
+    for _ in range(n_steps):
+        roll = rng.random()
+        if roll < 0.45:
+            k = int(rng.integers(2, MAXC + 1))
+            ops.append(("ins", rng.integers(0, 2 * V0, size=k).tolist()))
+        elif roll < 0.6:
+            ops.append(("del", int(rng.integers(0, 1 << 30))))
+        elif roll < 0.8:
+            ops.append(("vup", int(rng.integers(0, 1 << 30)),
+                        int(rng.integers(0, 2 * V0)), bool(rng.random() < 0.6)))
+        elif roll < 0.9:
+            ops.append(("grow", int(rng.integers(0, 4))))
+        else:
+            ops.append(("compact",))
+    return ops
+
+
+@pytest.mark.skipif(HAVE_HYPOTHESIS,
+                    reason="hypothesis present: the RuleBasedStateMachine "
+                           "variant below runs instead")
+def test_differential_fuzz_seeded():
+    """Hypothesis-free differential fuzz: N_EXAMPLES seeded episodes, the
+    same model/invariants as the state machine, zero divergences."""
+    rng = np.random.default_rng(2024)
+    for ep in range(N_EXAMPLES):
+        model = ElasticModel()
+        _drive(model, _random_ops(rng, STEPS))
+        if ep % 4 == 0:
+            model.check_histogram()
+
+
+if HAVE_HYPOTHESIS:
+
+    class ElasticStateMachine(RuleBasedStateMachine):
+        """hypothesis stateful driver over the shared model.  Rules return
+        early (not ``assume``) when a precondition fails, so every drawn
+        step is cheap and shrinking stays effective."""
+
+        def __init__(self):
+            super().__init__()
+            self.model = ElasticModel()
+
+        @rule(vs=st.lists(st.integers(0, 2 * V0 - 1), min_size=2,
+                          max_size=MAXC))
+        def insert(self, vs):
+            self.model.op_insert(vs)
+
+        @rule(choice=st.integers(0, 1 << 30))
+        def delete(self, choice):
+            self.model.op_delete(choice)
+
+        @rule(choice=st.integers(0, 1 << 30),
+              vid=st.integers(0, 2 * V0 - 1), insert=st.booleans())
+        def vertex_update(self, choice, vid, insert):
+            self.model.op_vertex_update(choice, vid, insert)
+
+        @rule(which=st.integers(0, 3))
+        def grow(self, which):
+            self.model.op_grow(which)
+
+        @rule()
+        def compact(self):
+            self.model.op_compact()
+
+        @rule()
+        def histogram_checkpoint(self):
+            self.model.check_histogram()
+
+        @invariant()
+        def store_matches_oracle(self):
+            self.model.check_store()
+
+    ElasticStateMachine.TestCase.settings = hypothesis.settings(
+        max_examples=N_EXAMPLES,
+        stateful_step_count=STEPS,
+        deadline=None,
+        suppress_health_check=list(hypothesis.HealthCheck),
+        # no persisted example database (CI runners are ephemeral — a
+        # saved counterexample would be lost anyway); print_blob gives a
+        # @reproduce_failure decorator in the failure output instead
+        database=None,
+        print_blob=True,
+    )
+
+    TestElasticStateMachine = ElasticStateMachine.TestCase

@@ -5,7 +5,8 @@ import numpy as np
 import pytest
 
 from repro.core import ops
-from repro.core.store import EMPTY, init_store, read_dense, read_sorted
+from repro.core.store import (
+    EMPTY, ERR_CAPACITY, init_store, read_dense, read_sorted)
 
 
 def build(data, max_card=8, max_edges=16, capacity=4096, granule=32):
@@ -87,7 +88,7 @@ def test_capacity_overflow_sets_error_flag():
     nl[:, :2] = [[50, 51], [52, 53]]
     st, _ = ops.insert_hyperedges(st, jnp.asarray(nl), jnp.full(2, 2, np.int32),
                                   jnp.ones(2, bool))
-    assert int(st.error) == 1
+    assert int(st.error) == ERR_CAPACITY
 
 
 def test_horizontal_grouped_updates():

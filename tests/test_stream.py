@@ -111,7 +111,8 @@ def test_scheduler_semantics():
 
     # a DEL preceding its INS in the log is dropped with the sticky error
     st = _run([(0, "del", 1), (1, "ins", [0, 1, 2])], zeros, **fixed)
-    assert int(st.error) == 1
+    assert int(st.error) == S.ERR_MALFORMED_DEL
+    assert [e.name for e in S.decode_errors(st)] == ["malformed-delete"]
     assert int(st.hg.h2v.n_live) == 1        # the insert still applied
 
     # double delete of one edge is a no-op (second resolves to EMPTY /
@@ -131,7 +132,7 @@ def test_push_overflow_sets_sticky_error():
     cards = jnp.full(6, 2, jnp.int32)
     ref = jnp.full(6, EMPTY, jnp.int32)
     log = S.push_events(log, t, kind, lists, cards, ref, jnp.ones(6, bool))
-    assert int(log.error) == 1
+    assert int(log.error) == S.ERR_LOG_OVERFLOW
     assert int(log.tail) == 4                # accepted prefix only
 
 
@@ -191,7 +192,8 @@ def test_ring_reuse_and_slot_collision():
     st = dataclasses.replace(st, log=_push_host(st.log, second))
     for _ in range(2):
         st = S.run_stream(st, n_steps=1, **kw)
-    assert int(st.error) == 1
+    assert int(st.error) == S.ERR_SLOT_COLLISION
+    assert [e.name for e in S.decode_errors(st)] == ["ring-slot-collision"]
 
 
 def test_expiry_quota_not_consumed_by_explicit_deletes():
